@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks (CPU wall-times are NOT TPU predictions; they
+exercise the code paths and report derived bandwidth-style metrics for
+relative comparisons: pim copy/init vs naive jnp, TRNG rate, attention
+impl variants)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, reps=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(out=sys.stdout):
+    print("name,us_per_call,derived", file=out)
+
+    # pim_copy vs naive gather-copy (arena is donated: thread it through,
+    # as the serving engine does)
+    from repro.kernels.rowclone import ops as rc
+    import time as _time
+    src = jnp.arange(8, dtype=jnp.int32)
+    dst = jnp.arange(8, 16, dtype=jnp.int32)
+    moved = 8 * 16384 * 4
+
+    def timed_threaded(fn, reps=10):
+        a = jnp.zeros((64, 16384), jnp.float32)
+        a = jax.block_until_ready(fn(a))  # warmup + compile
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            a = fn(a)
+        jax.block_until_ready(a)
+        return (_time.perf_counter() - t0) / reps * 1e6
+
+    us = timed_threaded(lambda a: rc.pim_page_copy(a, src, dst))
+    print(f"pim_page_copy_jnp,{us:.1f},{moved/us/1e3:.2f}GB/s", file=out)
+
+    arena = jnp.zeros((64, 16384), jnp.float32)
+    naive = jax.jit(lambda a: a.at[dst].set(a[src] * 1.0 + 0.0))
+    us = timeit(naive, arena)
+    print(f"naive_gather_copy,{us:.1f},{moved/us/1e3:.2f}GB/s", file=out)
+
+    us = timed_threaded(lambda a: rc.pim_page_init(a, dst, 0.0))
+    print(f"pim_page_init,{us:.1f},{moved/us/1e3:.2f}GB/s", file=out)
+
+    # pallas interpret-mode path (correctness-path cost, not TPU perf)
+    from repro.kernels.rowclone import rowclone as rck
+    x = jnp.ones((256, 1024), jnp.float32)
+    us = timeit(lambda v: rck.copy_2d(v, interpret=True), x)
+    print(f"pallas_copy_interpret,{us:.1f},", file=out)
+
+    # D-RaNGe generator
+    from repro.kernels.drange import ops as dr
+    seed = jnp.asarray([1, 2], jnp.uint32)
+    us = timeit(lambda s: dr.pim_random_u32(s, 256, 256), seed)
+    rate = 256 * 256 * 32 / us  # bits/us
+    print(f"pim_random_u32,{us:.1f},{rate:.0f}Mb/s", file=out)
+
+    # attention impls (tiny shapes; relative only)
+    from repro.models import attention as A
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 256, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 256, 2, 64)).astype(np.float32))
+    naive_fn = jax.jit(lambda q, k, v: A.naive_attention(q, k, v, causal=True))
+    chunk_fn = jax.jit(lambda q, k, v: A.chunked_attention(
+        q, k, v, causal=True, chunk_q=128, chunk_k=128))
+    us = timeit(naive_fn, q, k, v)
+    print(f"attention_naive_256,{us:.1f},", file=out)
+    us = timeit(chunk_fn, q, k, v)
+    print(f"attention_chunked_256,{us:.1f},", file=out)
+
+
+if __name__ == "__main__":
+    main()

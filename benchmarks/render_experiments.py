@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def load_all():
+    cells = {}
+    for f in glob.glob(os.path.join(ART, "*.json")):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def dryrun_table(cells):
+    lines = ["| arch | shape | mesh | compile (s) | params | peak GiB/dev (HLO-CPU) | analytic GiB/dev | fits | collectives (ag/ar/rs/a2a/cp) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh) in sorted(cells):
+        d = cells[(arch, shape, mesh)]
+        m = d["memory"]
+        c = d.get("collectives", {})
+        cc = (f"{c.get('all-gather',0)/2**30:.2f}/{c.get('all-reduce',0)/2**30:.2f}/"
+              f"{c.get('reduce-scatter',0)/2**30:.2f}/{c.get('all-to-all',0)/2**30:.2f}/"
+              f"{c.get('collective-permute',0)/2**30:.2f} GiB")
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {d['compile_s']:.0f} | "
+            f"{d['params']/1e9:.1f}B | {fmt_bytes(m['peak_bytes_per_device'])} | "
+            f"{fmt_bytes(m['analytic_bytes_per_device'])} | "
+            f"{'Y' if m['fits_16GiB_analytic'] else 'N'} | {cc} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = ["| arch | shape | t_compute | t_memory | t_collective | bound | useful frac | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh) in sorted(cells):
+        if mesh != "16x16":
+            continue
+        d = cells[(arch, shape, mesh)]
+        r = d.get("roofline")
+        if not r:
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {r['t_compute_s']:.3g}s | {r['t_memory_s']:.3g}s | "
+            f"{r['t_collective_s']:.3g}s | **{r['bottleneck']}** | "
+            f"{r['useful_fraction']:.3f} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def interesting(cells):
+    """Pick hillclimb candidates: worst roofline frac, most collective-
+    bound, most paper-representative (decode w/ KV paging)."""
+    rows = []
+    for (arch, shape, mesh), d in cells.items():
+        if mesh != "16x16" or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append({
+            "cell": f"{arch}/{shape}",
+            "frac": r["roofline_fraction"],
+            "coll_share": r["t_collective_s"] / t if t else 0,
+            "bottleneck": r["bottleneck"],
+        })
+    rows.sort(key=lambda x: x["frac"])
+    print("\nworst roofline fraction:")
+    for r in rows[:5]:
+        print("  ", r)
+    rows.sort(key=lambda x: -x["coll_share"])
+    print("most collective-bound:")
+    for r in rows[:5]:
+        print("  ", r)
+
+
+if __name__ == "__main__":
+    cells = load_all()
+    print(f"{len(cells)} artifacts\n")
+    print("### Dry-run table\n")
+    print(dryrun_table(cells))
+    print("\n### Roofline table (single-pod)\n")
+    print(roofline_table(cells))
+    interesting(cells)

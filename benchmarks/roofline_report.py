@@ -1,0 +1,50 @@
+"""Render the §Roofline table from the dry-run artifacts
+(experiments/dryrun/*.json).  One row per (arch x shape), single-pod."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh="16x16", out_dir=ART):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if "roofline" not in d:
+            continue
+        rows.append(d)
+    return rows
+
+
+def main(out=sys.stdout, markdown=False):
+    rows = load()
+    if markdown:
+        print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+              "bottleneck | useful | roofline | fits(analytic) |", file=out)
+        print("|---|---|---|---|---|---|---|---|---|", file=out)
+    else:
+        print("name,us_per_call,derived", file=out)
+    for d in rows:
+        r = d["roofline"]
+        m = d["memory"]
+        if markdown:
+            print(f"| {d['arch']} | {d['shape']} | {r['t_compute_s']:.3g} | "
+                  f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+                  f"{r['bottleneck']} | {r['useful_fraction']:.3f} | "
+                  f"{r['roofline_fraction']:.4f} | "
+                  f"{m.get('fits_16GiB_analytic')} |", file=out)
+        else:
+            t_us = r['t_compute_s'] * 1e6
+            print(f"roofline_{d['arch']}__{d['shape']},{t_us:.0f},"
+                  f"bottleneck={r['bottleneck']}"
+                  f";roofline_frac={r['roofline_fraction']:.4f}"
+                  f";useful={r['useful_fraction']:.3f}", file=out)
+
+
+if __name__ == "__main__":
+    main(markdown="--md" in sys.argv)

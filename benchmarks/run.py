@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernels, paper_tables, roofline_report, serving_e2e
+    sections = [
+        ("paper_tables (RowClone + D-RaNGe reproduction)", paper_tables.main),
+        ("kernels", kernels.main),
+        ("serving_e2e", serving_e2e.main),
+        ("roofline_report (from dry-run artifacts)", roofline_report.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        print(f"### {name}")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print()
+    if failed:
+        print(f"FAILED sections: {failed}")
+        sys.exit(1)
+    print("ALL BENCHMARK SECTIONS OK")
+
+
+if __name__ == '__main__':
+    main()

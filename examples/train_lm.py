@@ -1,0 +1,25 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on the synthetic-structured stream, with checkpointing and an injected
+failure mid-run (the framework restarts and the loss curve continues).
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 200]
+
+(This wraps the production launcher `repro.launch.train`; a ~100M model
+is gemma-2b reduced to width 768 / 12 layers with a 32k vocab.)
+"""
+
+import sys
+
+sys.argv = [sys.argv[0],
+            "--arch", "stablelm-3b", "--reduced",
+            "--width", "256", "--layers", "6",
+            "--steps", "220", "--batch", "8", "--seq", "128",
+            "--lr", "1e-3",
+            "--ckpt-dir", "/tmp/repro_train_lm",
+            "--ckpt-every", "50", "--fail-at", "110",
+            "--log-every", "20"] + sys.argv[1:]
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""PiDRAM core: the paper's contribution as a composable layer.
+
+Faithful-reproduction substrate (simulated DDR3 prototype):
+  timing, dram_model, memctrl, subarray, allocator, coherence, isa, poc,
+  drange, pimolib.DeviceLib
+
+TPU-native substrate (JAX/Pallas):
+  pimolib.TpuLib / TpuArena over repro.kernels.*
+"""
+
+from .allocator import (Allocation, CoherenceState, PimAllocError,
+                        SubarrayAllocator, allocator_from_subarray_map,
+                        arena_groups)
+from .coherence import CoherenceModel, CoherencePolicy
+from .dram_model import CellPhysics, DRAMGeometry, SimulatedDRAM
+from .drange import DRangeTRNG, characterize
+from .isa import Instruction, Opcode
+from .memctrl import EndToEndCosts, MemoryController
+from .pimolib import (Blocking, DeviceLib, OpReceipt, TpuArena, TpuLib,
+                      make_tpu_arena)
+from .poc import PimOpsController
+from .subarray import SubarrayMap, discover_subarrays
+from .timing import (DDR3Timings, PrototypeParams, ViolatedTimings,
+                     DEFAULT_PROTOTYPE, DEFAULT_TIMINGS, DEFAULT_VIOLATIONS)

@@ -1,0 +1,169 @@
+"""Simulated DRAM device with subarray structure and PiM cell physics.
+
+PiDRAM operates on *real* DDR3 chips whose internal organization
+(row->subarray mapping, per-cell reliability under violated timings) is
+proprietary and chip-specific.  This module provides the software stand-in
+for that device so the framework's system layers (subarray discovery,
+allocator, POC, D-RaNGe characterization) operate against the same opaque
+interface they would have on hardware:
+
+* rows grouped into subarrays with a *hidden, scrambled* row->subarray map
+  (the framework must discover it, exactly like on a real chip);
+* RowClone (ACT->PRE->ACT) succeeds **iff** source and destination rows sit
+  in the same subarray (charge sharing happens over shared bitlines and
+  sense amplifiers; rows in different subarrays do not share them);
+* D-RaNGe: under violated tRCD each cell fails with a fixed per-cell
+  probability; most cells are deterministic (p ~ 0 or ~ 1), a small
+  fraction are metastable (p ~ 0.5) — the "RNG cells" that D-RaNGe
+  characterizes and harvests.
+
+The model is deliberately numpy-based (it is a device model, not a
+differentiable program).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DRAMGeometry:
+    num_subarrays: int = 64
+    rows_per_subarray: int = 512
+    row_bytes: int = 8192
+
+    @property
+    def num_rows(self) -> int:
+        return self.num_subarrays * self.rows_per_subarray
+
+    @property
+    def total_bytes(self) -> int:
+        return self.num_rows * self.row_bytes
+
+
+@dataclass
+class CellPhysics:
+    """Per-cell activation-failure behaviour under violated tRCD.
+
+    ``rng_cell_fraction`` of cells are metastable with failure probability
+    drawn near 0.5; the rest are deterministic.  Matches the qualitative
+    characterization in D-RaNGe (Kim et al., HPCA'19): cells are
+    overwhelmingly deterministic, with a sparse population of true-random
+    cells whose behaviour is stable across time but spatially random.
+    """
+
+    rng_cell_fraction: float = 0.004
+    rng_prob_low: float = 0.40
+    rng_prob_high: float = 0.60
+    deterministic_flip_fraction: float = 0.03  # cells that always fail
+
+
+class SimulatedDRAM:
+    """A simulated DDR3 device exposing PiM-relevant behaviours.
+
+    Only row-granularity data movement is modelled with real data (that is
+    what RowClone needs); column reads model D-RaNGe's bit sampling.
+    """
+
+    def __init__(
+        self,
+        geometry: DRAMGeometry = DRAMGeometry(),
+        physics: CellPhysics = CellPhysics(),
+        seed: int = 0xD12A,
+    ) -> None:
+        self.geometry = geometry
+        self.physics = physics
+        self._rng = np.random.default_rng(seed)
+
+        # Hidden row -> subarray map.  Real chips scramble row addresses;
+        # we emulate that with a keyed permutation of row indices so that
+        # consecutive physical row numbers are NOT guaranteed to share a
+        # subarray (the discovery methodology has to cope with this).
+        perm = self._rng.permutation(geometry.num_rows)
+        self._row_to_subarray = perm % geometry.num_subarrays
+
+        # Backing store, row-major.
+        self._data = np.zeros((geometry.num_rows, geometry.row_bytes), np.uint8)
+
+        # D-RaNGe cell physics: per-cell failure probability for the first
+        # `drange_region_bytes` of each row (characterizing the whole device
+        # would be slow and is unnecessary for the case study).
+        self.drange_region_bytes = 128
+        n_cells = geometry.num_rows * self.drange_region_bytes * 8
+        u = self._rng.random(n_cells, dtype=np.float32)
+        probs = np.zeros(n_cells, dtype=np.float32)
+        det_flip = u < physics.deterministic_flip_fraction
+        probs[det_flip] = 1.0
+        is_rng = (u >= physics.deterministic_flip_fraction) & (
+            u < physics.deterministic_flip_fraction + physics.rng_cell_fraction
+        )
+        probs[is_rng] = self._rng.uniform(
+            physics.rng_prob_low, physics.rng_prob_high, int(is_rng.sum())
+        ).astype(np.float32)
+        self._fail_prob = probs.reshape(
+            geometry.num_rows, self.drange_region_bytes * 8
+        )
+
+    # ------------------------------------------------------------------ #
+    # Introspection (test-only; the framework must not peek)
+    # ------------------------------------------------------------------ #
+
+    def _true_subarray_of(self, row: int) -> int:
+        return int(self._row_to_subarray[row])
+
+    # ------------------------------------------------------------------ #
+    # Standard DRAM operation
+    # ------------------------------------------------------------------ #
+
+    def read_row(self, row: int) -> np.ndarray:
+        return self._data[row].copy()
+
+    def write_row(self, row: int, payload: np.ndarray) -> None:
+        assert payload.shape == (self.geometry.row_bytes,)
+        self._data[row] = payload
+
+    # ------------------------------------------------------------------ #
+    # PiM operations (issued by the memory controller with violated
+    # timings; success/behaviour is governed by device physics)
+    # ------------------------------------------------------------------ #
+
+    def rowclone(self, src_row: int, dst_row: int) -> bool:
+        """ACT(src) -> PRE -> ACT(dst) with violated tRAS/tRP.
+
+        Returns True when the copy actually happened (same subarray).
+        When rows are in different subarrays the destination row's charge
+        is restored by its own sense amplifiers and the data is unchanged
+        — exactly the observable failure mode used by the paper's
+        subarray-discovery methodology.
+        """
+        if self._row_to_subarray[src_row] != self._row_to_subarray[dst_row]:
+            return False
+        self._data[dst_row] = self._data[src_row]
+        return True
+
+    def drange_read(self, row: int, n_bits: int, rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Read ``n_bits`` cells of ``row`` with violated tRCD.
+
+        Each sampled bit equals the stored bit XOR a Bernoulli(fail_prob)
+        failure.  Rows under test are written with a known pattern by the
+        characterization pass, so failures are observable.
+        """
+        rng = rng or self._rng
+        n_bits = min(n_bits, self.drange_region_bytes * 8)
+        stored = np.unpackbits(self._data[row, : self.drange_region_bytes])[:n_bits]
+        flips = rng.random(n_bits) < self._fail_prob[row, :n_bits]
+        return (stored ^ flips.astype(np.uint8)).astype(np.uint8)
+
+
+@dataclass
+class DeviceHandle:
+    """What the rest of the framework sees: an opaque device + geometry."""
+
+    device: SimulatedDRAM
+    geometry: DRAMGeometry = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.geometry = self.device.geometry

@@ -1,0 +1,219 @@
+"""pimolib — PiDRAM's extensible PiM operations library (component ③).
+
+Two faces, one API:
+
+* **Model face** (`DeviceLib`): executes ops against the simulated DDR3
+  device through the POC register protocol, with end-to-end latency
+  accounting from the memory-controller timing model.  This is the
+  faithful reproduction path (paper workflow Fig. 2, steps ①-⑩).
+
+* **TPU face** (`TpuLib`): the same operations over a JAX HBM arena,
+  dispatched through the Pallas kernel layer (or XLA reference paths).
+  The POC handshake maps onto JAX's asynchronous dispatch: ``Ack`` = op
+  dispatched, ``Fin`` = result buffer committed (``block_until_ready``).
+
+Both are built for extension: registering a new PiM op is one entry in
+``_OPS`` plus its executor — the software mirror of the paper's
+"60 additional lines of Verilog" extensibility argument.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .allocator import Allocation, SubarrayAllocator
+from .coherence import CoherenceModel, CoherencePolicy
+from .isa import Instruction, Opcode
+from .memctrl import MemoryController
+from .poc import PimOpsController
+
+
+class Blocking(enum.Enum):
+    ACK = "ack"    # return once the POC acknowledged the op
+    FIN = "fin"    # block until the command sequence finished
+
+
+# ---------------------------------------------------------------------- #
+# Model face — drives the simulated prototype
+# ---------------------------------------------------------------------- #
+
+
+@dataclass
+class OpReceipt:
+    """What a pimolib call returns: success + accounted latency."""
+
+    ok: bool
+    latency_ns: float
+    op: str
+
+
+class DeviceLib:
+    """pimolib over the simulated DDR3 prototype."""
+
+    def __init__(
+        self,
+        poc: PimOpsController,
+        allocator: SubarrayAllocator,
+        coherence: CoherencePolicy = CoherencePolicy.PRECISE,
+    ) -> None:
+        self.poc = poc
+        self.allocator = allocator
+        self.coherence = CoherenceModel(coherence, poc.mc)
+        self.zero_rows: Dict[int, int] = {}  # group -> reserved all-zeros row
+
+    # -- supervisor-software services ----------------------------------- #
+
+    def reserve_zero_row(self, group: int) -> int:
+        """RowClone-Init copies from a reserved all-zeros row per subarray."""
+        if group not in self.zero_rows:
+            alloc = self.allocator.alloc(1, group=group, tag="zero-row")
+            row = alloc.rows[0]
+            geo = self.poc.mc.device.geometry
+            self.poc.mc.device.write_row(row, np.zeros(geo.row_bytes, np.uint8))
+            self.zero_rows[group] = row
+        return self.zero_rows[group]
+
+    # -- the four-step pimolib protocol ---------------------------------- #
+
+    def _issue(self, insn: Instruction, blocking: Blocking) -> None:
+        self.poc.store_instruction(insn.encode())   # (i) write instruction reg
+        self.poc.store_start()                      # (ii) set Start flag
+        flags = self.poc.load_flags()               # (iii) poll Ack / Fin
+        want = flags.ack if blocking is Blocking.ACK else flags.fin
+        assert want, "POC handshake failed"
+
+    def copy(self, src: Allocation, dst: Allocation,
+             blocking: Blocking = Blocking.FIN) -> OpReceipt:
+        """RowClone-Copy src -> dst (row lists must be same-subarray)."""
+        if src.group != dst.group or src.nrows != dst.nrows:
+            raise ValueError("copy operands must be same-subarray, same size")
+        t0 = self.poc.mc.now_ns
+        latency = self.coherence.flush_cost_ns(src, self.allocator, write_back=True)
+        ok = True
+        for s, d in zip(src.rows, dst.rows):
+            self._issue(Instruction(Opcode.RC_COPY, s, d), blocking)
+            latency += self.poc.mc.poc_handshake_ns()
+            ok &= self.poc.last_ok
+        latency += self.poc.mc.now_ns - t0
+        return OpReceipt(ok, latency, "rowclone_copy")
+
+    def init(self, dst: Allocation, blocking: Blocking = Blocking.FIN) -> OpReceipt:
+        """RowClone-Init: copy the reserved zero row over each dst row."""
+        zero = self.reserve_zero_row(dst.group)
+        t0 = self.poc.mc.now_ns
+        latency = self.coherence.flush_cost_ns(dst, self.allocator, write_back=False)
+        ok = True
+        for d in dst.rows:
+            self._issue(Instruction(Opcode.RC_INIT, zero, d), blocking)
+            latency += self.poc.mc.poc_handshake_ns()
+            ok &= self.poc.last_ok
+        latency += self.poc.mc.now_ns - t0
+        return OpReceipt(ok, latency, "rowclone_init")
+
+    def rand_dram(self, n_bits: int, trng) -> Tuple[np.ndarray, OpReceipt]:
+        """Paper's rand_dram(): drain the POC random-number buffer."""
+        bits = trng.random_bits(n_bits)
+        chunks = -(-n_bits // self.poc.mc.proto.drange_bits_per_read)
+        latency = (self.poc.mc.proto.drange_latency_ns
+                   + (chunks - 1) * self.poc.mc.proto.drange_sustained_ns)
+        return bits, OpReceipt(True, latency, "drange_rand")
+
+    # -- CPU baselines (memcpy / calloc through the core) ----------------- #
+
+    def cpu_copy(self, src: Allocation, dst: Allocation) -> OpReceipt:
+        mc = self.poc.mc
+        nbytes = src.nrows * mc.proto.row_bytes
+        for s, d in zip(src.rows, dst.rows):
+            mc.device.write_row(d, mc.device.read_row(s))
+        self.allocator.touch_cpu_write(dst)
+        return OpReceipt(True, mc.memcpy_ns(nbytes), "cpu_memcpy")
+
+    def cpu_init(self, dst: Allocation) -> OpReceipt:
+        mc = self.poc.mc
+        nbytes = dst.nrows * mc.proto.row_bytes
+        geo = mc.device.geometry
+        for d in dst.rows:
+            mc.device.write_row(d, np.zeros(geo.row_bytes, np.uint8))
+        self.allocator.touch_cpu_write(dst)
+        return OpReceipt(True, mc.memset_ns(nbytes), "cpu_calloc")
+
+
+# ---------------------------------------------------------------------- #
+# TPU face — the same ops over a JAX HBM arena
+# ---------------------------------------------------------------------- #
+
+
+@dataclass
+class TpuArena:
+    """A paged HBM arena: (num_pages, page_elems) + its allocator."""
+
+    buffer: jax.Array
+    allocator: SubarrayAllocator
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def num_pages(self) -> int:
+        return self.buffer.shape[0]
+
+    @property
+    def page_elems(self) -> int:
+        return self.buffer.shape[1]
+
+
+class TpuLib:
+    """pimolib over a JAX arena (serving/training integration point)."""
+
+    def __init__(self, arena: TpuArena, *, use_pallas: bool = False) -> None:
+        from repro.kernels.rowclone import ops as rc_ops
+        from repro.kernels.drange import ops as dr_ops
+        self.arena = arena
+        self.use_pallas = use_pallas
+        self._rc = rc_ops
+        self._dr = dr_ops
+        self.stats = {"copies": 0, "inits": 0, "rand_words": 0}
+
+    def copy_pages(self, src: Allocation, dst: Allocation,
+                   blocking: Blocking = Blocking.ACK) -> None:
+        if src.group != dst.group or src.nrows != dst.nrows:
+            raise ValueError("copy operands must be same-slab, same size")
+        self.arena.buffer = self._rc.pim_page_copy(
+            self.arena.buffer, jnp.asarray(src.rows, jnp.int32),
+            jnp.asarray(dst.rows, jnp.int32), use_pallas=self.use_pallas)
+        if blocking is Blocking.FIN:
+            self.arena.buffer.block_until_ready()
+        self.stats["copies"] += src.nrows
+
+    def init_pages(self, dst: Allocation, value=0.0,
+                   blocking: Blocking = Blocking.ACK) -> None:
+        self.arena.buffer = self._rc.pim_page_init(
+            self.arena.buffer, jnp.asarray(dst.rows, jnp.int32), value,
+            use_pallas=self.use_pallas)
+        if blocking is Blocking.FIN:
+            self.arena.buffer.block_until_ready()
+        self.stats["inits"] += dst.nrows
+
+    def rand(self, seed: jax.Array, n_rows: int, n_cols: int) -> jax.Array:
+        self.stats["rand_words"] += n_rows * n_cols
+        return self._dr.pim_random_u32(seed, n_rows, n_cols, use_pallas=self.use_pallas)
+
+    def read_pages(self, alloc: Allocation) -> jax.Array:
+        return self.arena.buffer[jnp.asarray(alloc.rows, jnp.int32)]
+
+    def write_pages(self, alloc: Allocation, values: jax.Array) -> None:
+        self.arena.buffer = self.arena.buffer.at[
+            jnp.asarray(alloc.rows, jnp.int32)].set(values.astype(self.arena.buffer.dtype))
+
+
+def make_tpu_arena(num_slabs: int, pages_per_slab: int, page_elems: int,
+                   dtype=jnp.bfloat16) -> TpuArena:
+    from .allocator import arena_groups
+    buf = jnp.zeros((num_slabs * pages_per_slab, page_elems), dtype)
+    alloc = SubarrayAllocator(arena_groups(num_slabs, pages_per_slab))
+    return TpuArena(buffer=buf, allocator=alloc, dtype=dtype)

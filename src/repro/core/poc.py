@@ -1,0 +1,120 @@
+"""PiM Operations Controller (POC).
+
+The POC is PiDRAM's hardware component ①: it exposes memory-mapped
+*instruction*, *data* and *flag* registers to the CPU, decodes PiDRAM
+instructions, and drives the memory controller.  The handshake protocol
+(paper Fig. 2) is preserved exactly:
+
+  1. CPU stores instruction word       -> instruction register
+  2. CPU stores Start=1                -> flag register
+  3. POC forwards op to memory ctrl, sets Start=0, Ack=1
+  4. memory controller issues the (violated-timing) command sequence
+  5. controller sets Fin=1 when the last command is issued
+  6. CPU polls Ack (non-blocking start) or Fin (blocking completion)
+  7. CPU loads result (if any)          <- data register
+
+On the TPU target the same object front-ends the asynchronous kernel
+dispatch queue (JAX dispatch is async; `wait_fin` maps to blocking on the
+result buffer), so pimolib code is identical across both substrates.
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from .isa import Instruction, Opcode
+from .memctrl import MemoryController, SequenceResult
+
+
+@dataclass
+class FlagRegister:
+    start: bool = False
+    ack: bool = False
+    fin: bool = False
+
+
+@dataclass
+class PocStats:
+    executed: Dict[str, int] = field(default_factory=lambda: collections.defaultdict(int))
+    busy_ns: float = 0.0
+
+
+class PimOpsController:
+    """Decode/execute PiDRAM instructions against a memory controller."""
+
+    def __init__(self, mc: MemoryController, data_buffer_words: int = 64) -> None:
+        self.mc = mc
+        self.instruction_reg: int = 0
+        self.data_reg: int = 0
+        self.flags = FlagRegister()
+        self.stats = PocStats()
+        # D-RaNGe random-number buffer (hardware component in the paper's
+        # D-RaNGe extension): the scheduler deposits generated bits here.
+        self.rng_buffer: Deque[int] = collections.deque(maxlen=data_buffer_words * 64)
+        self._last_result: Optional[SequenceResult] = None
+
+    # -------------------- CPU-visible register interface ---------------- #
+
+    def store_instruction(self, word: int) -> None:
+        self.instruction_reg = word
+
+    def store_start(self) -> None:
+        """CPU sets Start; POC decodes + executes synchronously in the
+        model (the timing model accounts latency; see memctrl)."""
+        self.flags.start = True
+        self._execute()
+
+    def load_flags(self) -> FlagRegister:
+        return self.flags
+
+    def load_data(self) -> int:
+        return self.data_reg
+
+    # -------------------- execution ------------------------------------- #
+
+    def _execute(self) -> None:
+        insn = Instruction.decode(self.instruction_reg)
+        self.flags.start = False
+        self.flags.ack = True
+        self.flags.fin = False
+
+        t0 = self.mc.now_ns
+        if insn.opcode is Opcode.NOP:
+            res = SequenceResult(0.0, [])
+        elif insn.opcode in (Opcode.RC_COPY, Opcode.RC_INIT):
+            res = self.mc.run_sequence("rowclone_copy", insn.operand0, insn.operand1)
+        elif insn.opcode is Opcode.DR_GEN:
+            res = self.mc.run_sequence("drange_read", insn.operand0, insn.operand1)
+            if res.data is not None:
+                for b in res.data:
+                    self.rng_buffer.append(int(b))
+        elif insn.opcode is Opcode.READ_BUF:
+            # Drain up to 64 bits into the data register.
+            word = 0
+            n = min(64, len(self.rng_buffer))
+            for i in range(n):
+                word |= self.rng_buffer.popleft() << i
+            self.data_reg = word
+            res = SequenceResult(0.0, [])
+        elif insn.opcode is Opcode.BULK_COPY:
+            res = self.mc.run_sequence("rowclone_copy", insn.operand0, insn.operand1)
+        else:  # pragma: no cover - decode guarantees valid opcodes
+            raise ValueError(f"unhandled opcode {insn.opcode}")
+
+        self._last_result = res
+        self.stats.executed[insn.opcode.name] += 1
+        self.stats.busy_ns += self.mc.now_ns - t0
+        self.flags.fin = True
+
+    # -------------------- convenience ------------------------------------ #
+
+    @property
+    def last_ok(self) -> bool:
+        return bool(self._last_result and self._last_result.ok)
+
+    def rng_bits_available(self) -> int:
+        return len(self.rng_buffer)

@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules and parameter-spec inference.
+
+Models annotate tensors with *logical* axis names; this module resolves
+them to mesh `PartitionSpec`s with divisibility-checked fallback (a
+logical axis whose dim does not divide the mesh axis product is simply
+replicated — this is what lets one rule set drive all 10 assigned
+architectures on a fixed 16x16 / 2x16x16 mesh).
+
+FSDP (ZeRO-3): after TP resolution, parameters get one additional dim
+sharded over the batch axes — XLA then all-gathers weights per use and
+reduce-scatters gradients, which with scan-over-layers reproduces the
+classic ZeRO-3 schedule.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis name -> tuple of mesh axis names (tried in order).
+def default_rules(multi_pod: bool) -> Dict[str, Tuple[str, ...]]:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch_axes,
+        "expert_batch": batch_axes,     # MoE shard_map token axis
+        "seq": ("model",),              # sequence parallelism (activations/KV)
+        "heads": ("model",),            # TP: attention heads
+        "kv_heads": ("model",),         # TP: kv heads (GQA may fall back)
+        "ff": ("model",),               # TP: MLP hidden
+        "experts": ("model",),          # EP: expert dim
+        "vocab": ("model",),            # TP: embedding/logits vocab
+        "embed": (),                    # d_model: replicated (TP-wise)
+        "dmodel_rp": (),                # row-parallel attn (off by default)
+        "layers": (),                   # scan dim: never sharded
+        "kv_lora": (),                  # MLA latent: replicated
+        "state": (),                    # SSM state dim
+    }
+
+
+@dataclass
+class ShardingEnv:
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, Tuple[str, ...]] = field(default_factory=lambda: default_rules(False))
+    fsdp: bool = True
+    batch_axes: Tuple[str, ...] = ("data",)
+
+
+_tls = threading.local()
+
+
+def env() -> ShardingEnv:
+    return getattr(_tls, "env", None) or ShardingEnv(mesh=None)
+
+
+@contextlib.contextmanager
+def sharding_env(mesh: Optional[Mesh], *, multi_pod: bool = False,
+                 fsdp: bool = True, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = getattr(_tls, "env", None)
+    _tls.env = ShardingEnv(
+        mesh=mesh,
+        rules=rules or default_rules(multi_pod),
+        fsdp=fsdp,
+        batch_axes=("pod", "data") if multi_pod else ("data",),
+    )
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _tls.env
+        else:
+            yield _tls.env
+    finally:
+        _tls.env = prev
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def resolve_spec(shape: Sequence[int], laxes: Sequence[Optional[str]],
+                 *, fsdp_hint: bool = False) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback.
+
+    ``fsdp_hint``: additionally shard the largest yet-unsharded dim over
+    the batch axes (parameters only).
+    """
+    e = env()
+    if e.mesh is None:
+        return P()
+    assert len(shape) == len(laxes), (shape, laxes)
+    spec: list = [None] * len(shape)
+    used_mesh_axes: set = set()
+    for i, name in enumerate(laxes):
+        if name is None:
+            continue
+        axes = e.rules.get(name, ())
+        if not axes:
+            continue
+        if any(a in used_mesh_axes for a in axes):
+            continue
+        size = _axes_size(e.mesh, axes)
+        if size > 1 and shape[i] % size == 0:
+            spec[i] = axes if len(axes) > 1 else axes[0]
+            used_mesh_axes.update(axes)
+    if fsdp_hint and e.fsdp and not any(a in used_mesh_axes for a in e.batch_axes):
+        fs = _axes_size(e.mesh, e.batch_axes)
+        # largest unsharded, divisible dim (skip dim 0 = scan/layers dim
+        # when it is annotated 'layers')
+        cands = [
+            (shape[i], i) for i in range(len(shape))
+            if spec[i] is None and laxes[i] != "layers" and shape[i] % fs == 0 and shape[i] >= fs
+        ]
+        if cands:
+            _, i = max(cands)
+            spec[i] = e.batch_axes if len(e.batch_axes) > 1 else e.batch_axes[0]
+    return P(*spec)
+
+
+def shard(x: jax.Array, *laxes: Optional[str]) -> jax.Array:
+    """Apply a with_sharding_constraint from logical axes (no-op without
+    a mesh)."""
+    e = env()
+    if e.mesh is None:
+        return x
+    spec = resolve_spec(x.shape, laxes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(e.mesh, spec))
+
+
+def named_sharding(spec: P) -> Optional[NamedSharding]:
+    e = env()
+    if e.mesh is None:
+        return None
+    return NamedSharding(e.mesh, spec)

@@ -1,0 +1,17 @@
+"""Reference oracle for the D-RaNGe kernel: identical Threefry2x32
+arithmetic in plain jnp (bit-exact vs the kernel)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .drange import threefry2x32
+
+
+def random_u32(seed: jax.Array, n_rows: int, n_cols: int) -> jax.Array:
+    import numpy as np
+    seed = seed.astype(jnp.uint32)
+    ctr = jnp.arange(n_rows * n_cols, dtype=jnp.uint32).reshape(n_rows, n_cols)
+    x0, _ = threefry2x32(seed[0], seed[1], ctr, ctr ^ np.uint32(0x9E3779B9))
+    return x0

@@ -1,0 +1,123 @@
+"""Blockwise fused (flash) attention forward kernel for TPU.
+
+The perf-critical compute hot-spot of every assigned LM architecture.
+Online-softmax attention with (bq, bk) tiling:
+
+  grid = (batch, q_heads, num_q_blocks, num_kv_blocks)
+
+The kv-block axis is the minor-most grid dimension, so for a fixed
+(b, h, i) the kernel visits kv blocks sequentially while running
+max / sum / weighted-accumulator live in VMEM scratch — the classic
+flash-attention recurrence.  Causal masking is applied per-tile from
+global row/col indices.  GQA/MQA is supported by mapping query head h to
+kv head h // group_size in the k/v BlockSpec index maps.
+
+Block sizes default to (bq, bk) = (256, 512) with head_dim up to 256:
+q-tile 256x256xf32 (256 KB) + k,v tiles 512x256 (2x512 KB) + acc scratch
+well under the ~16 MiB VMEM budget, MXU-aligned (multiples of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, bq: int, bk: int, seq_k: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    col = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = col < seq_k                                   # padding mask
+    if causal:
+        row = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = mask & (col <= row)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                  # fully-masked rows
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Fused attention forward.
+
+    q: (B, H, Sq, D);  k, v: (B, KVH, Sk, D) with H % KVH == 0.
+    Returns (B, H, Sq, D) in q.dtype.
+    """
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    # explicit zero padding to block multiples: padded kv columns are
+    # masked by seq_k below; padded q rows are sliced off the output.
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    sq_p, sk_p = sq + pq, sk + pk
+    grid = (b, h, pl.cdiv(sq_p, bq), pl.cdiv(sk_p, bk))
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bk=bk, seq_k=sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)[:, :, :sq]

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the flash-attention kernel family."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import flash_attention as fa, ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sm_scale", "block_q", "block_k", "use_pallas", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, sm_scale: float | None = None,
+              block_q: int = 256, block_k: int = 512,
+              use_pallas: bool = True, interpret: bool = not _ON_TPU) -> jax.Array:
+    if use_pallas:
+        return fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+    return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale)

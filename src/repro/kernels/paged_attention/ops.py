@@ -1,0 +1,23 @@
+"""Jit'd wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import paged_attention as pa, ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "use_pallas", "interpret"))
+def paged_attention(q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    sm_scale: float | None = None,
+                    use_pallas: bool = True, interpret: bool = not _ON_TPU) -> jax.Array:
+    if use_pallas:
+        return pa.paged_attention(q, k_arena, v_arena, block_tables, lengths,
+                                  sm_scale=sm_scale, interpret=interpret)
+    return ref.paged_attention(q, k_arena, v_arena, block_tables, lengths,
+                               sm_scale=sm_scale)

@@ -1,0 +1,119 @@
+"""Paged decode attention kernel over the PiM KV arena.
+
+This is where PiDRAM's memory-management contribution meets the serving
+path: the KV cache lives in a page arena managed by the subarray-aware
+allocator (`repro.serving.kv_cache`), and decode attention walks each
+sequence's *block table* — pages are never copied or compacted; forking a
+sequence is a `pim_page_copy` (RowClone) and freeing is a `pim_page_init`.
+
+Kernel layout (decode: one query token per sequence):
+
+  grid = (batch, max_pages_per_seq)
+
+Scalar-prefetched operands: block_tables (batch, max_pages) and context
+lengths (batch,).  For grid step (b, p) the k/v BlockSpecs select arena
+page ``block_tables[b, p]``; flash-style running (m, l, acc) scratch
+accumulates across the page axis.  Pages beyond ``ceil(len/page)`` are
+masked out entirely.
+
+q: (B, H, D) single token per sequence; kv arena: (pages, page_size, KVH, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size: int, sm_scale: float,
+                  groups: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    ctx_len = len_ref[b]
+
+    @pl.when(p * page_size < ctx_len)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32) * sm_scale          # (H, D)
+        k = k_ref[0].astype(jnp.float32)                     # (page, KVH, D)
+        v = v_ref[0].astype(jnp.float32)                     # (page, KVH, D)
+        h, d = q.shape
+        kvh = k.shape[1]
+        qg = q.reshape(kvh, groups, d)                       # (KVH, G, D)
+        # scores: (KVH, G, page)
+        s = jnp.einsum("kgd,pkd->kgp", qg, k)
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(pos < ctx_len, s, _NEG_INF)
+
+        m_prev = m_scr[...]                                  # (H, 1)
+        m_cur = jnp.max(s, axis=2).reshape(h, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        ps = jnp.exp(s - m_new.reshape(kvh, groups, 1))
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(ps, axis=2).reshape(h, 1)
+        pv = jnp.einsum("kgp,pkd->kgd", ps, v).reshape(h, d)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    sm_scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Decode attention over a paged KV arena.
+
+    q: (B, H, D); k_arena/v_arena: (pages, page_size, KVH, D);
+    block_tables: (B, max_pages) int32; lengths: (B,) int32.
+    """
+    bsz, h, d = q.shape
+    pages, page_size, kvh, _ = k_arena.shape
+    groups = h // kvh
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    max_pages = block_tables.shape[1]
+    grid = (bsz, max_pages)
+
+    kernel = functools.partial(
+        _paged_kernel, page_size=page_size, sm_scale=sm_scale, groups=groups)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, p, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d), lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d), lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, p, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_arena, v_arena)

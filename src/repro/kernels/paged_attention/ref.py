@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention(q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    sm_scale: float | None = None) -> jax.Array:
+    bsz, h, d = q.shape
+    pages, page_size, kvh, _ = k_arena.shape
+    groups = h // kvh
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    max_pages = block_tables.shape[1]
+    max_len = max_pages * page_size
+
+    # Gather each sequence's logical KV from its pages.
+    k = k_arena[block_tables]                    # (B, P, page, KVH, D)
+    v = v_arena[block_tables]
+    k = k.reshape(bsz, max_len, kvh, d)
+    v = v.reshape(bsz, max_len, kvh, d)
+
+    qg = q.reshape(bsz, kvh, groups, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(max_len)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(bsz, h, d).astype(q.dtype)

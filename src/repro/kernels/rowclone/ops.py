@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the RowClone kernel family.
+
+``use_pallas`` selects the Pallas kernel (TPU target; interpret-mode on
+CPU) vs the pure-jnp reference.  Distribution-level code (dry-run, train,
+serve) defaults to the jnp path — XLA already emits a fused copy/memset
+for it — while the Pallas path is the TPU hot-spot implementation
+validated against the reference in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref, rowclone
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pim_copy(src: jax.Array, *, use_pallas: bool = False, interpret: bool = not _ON_TPU) -> jax.Array:
+    """Bulk copy. 2D inputs stream through the Pallas kernel; other ranks
+    reshape to 2D first (row-major pages)."""
+    if not use_pallas:
+        return ref.copy_2d(src)
+    x2 = src.reshape(src.shape[0], -1) if src.ndim != 2 else src
+    out = rowclone.copy_2d(x2, interpret=interpret)
+    return out.reshape(src.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "use_pallas", "interpret"))
+def pim_init(shape, value, dtype=jnp.float32, *, use_pallas: bool = False,
+             interpret: bool = not _ON_TPU) -> jax.Array:
+    if not use_pallas:
+        return ref.init_2d(shape, value, dtype)
+    import numpy as np
+    flat = (int(np.prod(shape[:-1])), shape[-1]) if len(shape) != 2 else shape
+    out = rowclone.init_2d(flat, value, dtype, interpret=interpret)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
+def pim_page_copy(arena: jax.Array, src_pages: jax.Array, dst_pages: jax.Array,
+                  *, use_pallas: bool = False, interpret: bool = not _ON_TPU) -> jax.Array:
+    """RowClone page copy inside a donated arena buffer."""
+    if not use_pallas:
+        return ref.page_copy(arena, src_pages, dst_pages)
+    return rowclone.page_copy(arena, src_pages, dst_pages, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
+def pim_page_init(arena: jax.Array, dst_pages: jax.Array, value,
+                  *, use_pallas: bool = False, interpret: bool = not _ON_TPU) -> jax.Array:
+    if not use_pallas:
+        return ref.page_init(arena, dst_pages, value)
+    return rowclone.page_init(arena, dst_pages, value, interpret=interpret)

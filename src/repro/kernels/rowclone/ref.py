@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the RowClone kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy_2d(src: jax.Array) -> jax.Array:
+    return src + jnp.zeros((), src.dtype)  # forces a materialized copy
+
+
+def init_2d(shape, value, dtype=jnp.float32) -> jax.Array:
+    return jnp.full(shape, value, dtype)
+
+
+def page_copy(arena: jax.Array, src_pages: jax.Array, dst_pages: jax.Array) -> jax.Array:
+    return arena.at[dst_pages].set(arena[src_pages])
+
+
+def page_init(arena: jax.Array, dst_pages: jax.Array, value) -> jax.Array:
+    page = jnp.full((dst_pages.shape[0], arena.shape[1]), value, arena.dtype)
+    return arena.at[dst_pages].set(page)

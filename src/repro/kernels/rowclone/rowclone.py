@@ -1,0 +1,149 @@
+"""RowClone Pallas kernels: bulk in-memory copy / initialization on TPU.
+
+The TPU-native adaptation of RowClone (DESIGN.md SS2): bulk data movement
+that never occupies the MXU/VPU with useful work — a pure streaming
+HBM -> VMEM -> HBM pipeline.  Pallas double-buffers the grid automatically,
+so with row-sized blocks this runs at HBM bandwidth, the TPU equivalent of
+"copy at row-buffer speed instead of through the core".
+
+Three kernels:
+
+* ``copy``      — tile-streamed tensor copy.
+* ``init``      — tile memset from an SMEM scalar (no read traffic at all).
+* ``page_copy`` — arena page copy: ``arena[dst_page] <- arena[src_page]``
+  for a batch of page pairs, with the page index list scalar-prefetched
+  (the BlockSpec index_map reads it — the TPU version of the POC consuming
+  a PiDRAM instruction's row-address operands).  The arena is aliased
+  in/out, so untouched pages are never moved: this is the RowClone
+  "data never leaves the memory device" property at the XLA buffer level.
+
+Block shapes are chosen so a block is a multiple of the (8, 128) f32 /
+(16, 128) bf16 VMEM tile and comfortably fits VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile: 8 MiB of f32 per block-pair (in+out) incl. double buffering
+# stays well under the ~16 MiB v5e VMEM budget at (512, 1024) f32;
+# bf16 halves it.
+_BLOCK_ROWS = 512
+_BLOCK_COLS = 1024
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def copy_2d(src: jax.Array, *, block_rows: int = _BLOCK_ROWS,
+            block_cols: int = _BLOCK_COLS, interpret: bool = False) -> jax.Array:
+    """Streamed copy of a 2D array (rows, cols)."""
+    rows, cols = src.shape
+    br, bc = min(block_rows, rows), min(block_cols, cols)
+    grid = (pl.cdiv(rows, br), pl.cdiv(cols, bc))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        interpret=interpret,
+    )(src)
+
+
+def _init_kernel(val_ref, dst_ref):
+    dst_ref[...] = jnp.full(dst_ref.shape, val_ref[0], dst_ref.dtype)
+
+
+def init_2d(shape, value, dtype=jnp.float32, *, block_rows: int = _BLOCK_ROWS,
+            block_cols: int = _BLOCK_COLS, interpret: bool = False) -> jax.Array:
+    """Memset: write ``value`` into a fresh (rows, cols) buffer.
+
+    Unlike ``jnp.full`` followed by ops, this is a single write-only pass
+    (the calloc-vs-RowClone-Init distinction: no read-for-ownership).
+    """
+    rows, cols = shape
+    br, bc = min(block_rows, rows), min(block_cols, cols)
+    grid = (pl.cdiv(rows, br), pl.cdiv(cols, bc))
+    val = jnp.asarray([value], dtype)
+    return pl.pallas_call(
+        _init_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(shape, dtype),
+        interpret=interpret,
+    )(val)
+
+
+def _page_copy_kernel(src_idx_ref, dst_idx_ref, arena_ref, out_ref):
+    # Grid: (num_copies, col_blocks).  BlockSpec index_maps below select
+    # arena[src_idx[i]] as input block and arena[dst_idx[i]] as output
+    # block, so the kernel body is a pure tile move.
+    del src_idx_ref, dst_idx_ref
+    out_ref[...] = arena_ref[...]
+
+
+def page_copy(arena: jax.Array, src_pages: jax.Array, dst_pages: jax.Array,
+              *, block_cols: int = 4096, interpret: bool = False) -> jax.Array:
+    """Copy ``arena[src_pages[i]] -> arena[dst_pages[i]]`` for all i.
+
+    arena: (num_pages, page_elems); src/dst_pages: (n,) int32.
+    The arena buffer is donated/aliased: XLA updates pages in place.
+    """
+    num_pages, page_elems = arena.shape
+    n = src_pages.shape[0]
+    bc = min(block_cols, page_elems)
+    grid = (n, pl.cdiv(page_elems, bc))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda i, j, src_idx, dst_idx: (src_idx[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, src_idx, dst_idx: (dst_idx[i], j)),
+    )
+    return pl.pallas_call(
+        _page_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},  # arena (after 2 scalar-prefetch args) -> out
+        interpret=interpret,
+    )(src_pages.astype(jnp.int32), dst_pages.astype(jnp.int32), arena)
+
+
+def _page_init_kernel(dst_idx_ref, val_ref, arena_ref, out_ref):
+    del dst_idx_ref, arena_ref
+    out_ref[...] = jnp.full(out_ref.shape, val_ref[0], out_ref.dtype)
+
+
+def page_init(arena: jax.Array, dst_pages: jax.Array, value,
+              *, block_cols: int = 4096, interpret: bool = False) -> jax.Array:
+    """Memset ``arena[dst_pages[i]] <- value`` (RowClone-Init on pages)."""
+    num_pages, page_elems = arena.shape
+    n = dst_pages.shape[0]
+    bc = min(block_cols, page_elems)
+    grid = (n, pl.cdiv(page_elems, bc))
+    val = jnp.asarray([value], arena.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # value
+            pl.BlockSpec(memory_space=pl.ANY),       # arena (aliased, unread)
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, dst_idx: (dst_idx[i], j)),
+    )
+    return pl.pallas_call(
+        _page_init_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(dst_pages.astype(jnp.int32), val, arena)

@@ -1,0 +1,122 @@
+"""End-to-end training driver.
+
+Example (CPU, reduced 100M-class model, few hundred steps):
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On a real cluster the same driver runs under the production mesh
+(--mesh data,model) with per-host data sharding; here the mesh defaults
+to all local devices on the `data` axis.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import ARCHS, OptimizerConfig, ParallelConfig, ShapeConfig, reduced
+from repro.data.pipeline import PipelineConfig, Prefetcher, SyntheticLM
+from repro.distributed.sharding import sharding_env
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as T
+from repro.models.params import init_params, param_count
+from repro.runtime.fault_tolerance import FailureInjector, Supervisor
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--width", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject node failures at these steps (FT demo)")
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="mesh data size (0 = all local devices)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg, d_model=args.width, num_layers=args.layers,
+                      d_ff=args.width * 4, vocab_size=4096)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    pcfg = ParallelConfig(remat="full", attention_impl="chunked",
+                          attention_chunk=min(512, args.seq),
+                          moe_impl="dense")
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                           total_steps=args.steps)
+
+    ndev = args.data_axis or len(jax.devices())
+    mesh = make_local_mesh(data=ndev, model=1)
+
+    with sharding_env(mesh, fsdp=True):
+        defs = T.model_defs(cfg)
+        print(f"arch={cfg.name} params={param_count(defs):,}")
+        params = init_params(defs, jax.random.PRNGKey(0))
+        init_state, step_fn = make_train_step(cfg, pcfg, ocfg)
+        state = init_state(params)
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+        data = SyntheticLM(cfg, shape, PipelineConfig(seed=1))
+        import os as _os
+        ckpt_dir = args.ckpt_dir
+        if not args.resume and _os.path.isdir(ckpt_dir) and _os.listdir(ckpt_dir):
+            # fresh run: never resume from a stale (possibly different-
+            # config) checkpoint tree
+            n = 1
+            while _os.path.isdir(f"{ckpt_dir}.run{n}"):
+                n += 1
+            ckpt_dir = f"{ckpt_dir}.run{n}"
+            print(f"checkpoint dir in use; starting fresh at {ckpt_dir}")
+        ckpt = Checkpointer(ckpt_dir)
+        start = 0
+        if args.resume and ckpt.latest_step() is not None:
+            state, start = ckpt.load(state)
+            print(f"resumed from step {start}")
+
+        sup = Supervisor(ckpt, ckpt_every=args.ckpt_every,
+                         injector=FailureInjector(fail_at=args.fail_at))
+        t0 = time.time()
+        losses = []
+
+        def wrapped_step(st, batch):
+            st, metrics = jstep(st, {k: jnp.asarray(v) for k, v in batch.items()})
+            metrics = {k: float(v) for k, v in metrics.items()}
+            losses.append(metrics["loss"])
+            n = len(losses)
+            if n % args.log_every == 0:
+                dt = time.time() - t0
+                tps = n * shape.tokens / dt
+                print(f"step {n:5d} loss {metrics['loss']:.4f} "
+                      f"gnorm {metrics['grad_norm']:.2f} tok/s {tps:,.0f}")
+            return st, metrics
+
+        state, report = sup.run(state, wrapped_step, data.batch, args.steps,
+                                start_step=start)
+        print(json.dumps({
+            "steps_run": report.steps_run, "restarts": report.restarts,
+            "resumed_from": report.resumed_from,
+            "first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None,
+        }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,493 @@
+"""Attention: GQA/MQA, MLA (DeepSeek), cross-attention; chunked-flash
+training path and cache-based decode path.
+
+Implementation notes (see DESIGN.md SS4):
+
+* **chunked attention** — an online-softmax pair-scan: the static tile
+  list [(i, j) | tile j reachable from tile i] is scanned with running
+  (m, l, acc) carried per q position.  No (sq, sk) score tensor is ever
+  materialized, HLO stays O(1) in sequence length, causal tiles that
+  cannot contribute are never enqueued, and the whole thing is
+  reverse-differentiable (plain `lax.scan`).  This is the jnp twin of
+  `repro.kernels.flash_attention` (which is the TPU hot-spot kernel,
+  used on real hardware for inference).
+* **decode** — single-token attention over a dense KV cache whose
+  sequence axis is sharded over the `model` mesh axis (sequence
+  parallelism).  Softmax statistics over the sharded axis become two
+  small all-reduces (flash-decoding style), inserted by SPMD.
+* **MLA** — training/prefill expand the latent to per-head k/v;
+  decode runs in *absorbed* form: queries are pulled into the latent
+  space, attention happens against the (tiny) compressed cache, and the
+  context is up-projected once per token.  The cache stores only
+  (c_kv, k_rope) — the property that makes MLA pages ~11x smaller in the
+  PiM arena.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import shard
+from .layers import apply_rope, cast, rope_sincos
+from .params import ParamDef
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# Parameter definitions
+# --------------------------------------------------------------------- #
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.mla:
+        m = cfg.mla
+        defs = {
+            "wq": ParamDef((d, h, m.nope_head_dim + m.rope_head_dim), ("embed", "heads", None)),
+            "wkv_a": ParamDef((d, m.kv_lora_rank + m.rope_head_dim), ("embed", None)),
+            "ckv_norm": ParamDef((m.kv_lora_rank,), (None,), init="ones"),
+            "wk_b": ParamDef((m.kv_lora_rank, h, m.nope_head_dim), ("kv_lora", "heads", None)),
+            "wv_b": ParamDef((m.kv_lora_rank, h, m.v_head_dim), ("kv_lora", "heads", None)),
+            "wo": ParamDef((h, m.v_head_dim, d), ("heads", None, "embed")),
+        }
+        if m.q_lora_rank:
+            defs["wq_a"] = ParamDef((d, m.q_lora_rank), ("embed", None))
+            defs["q_norm"] = ParamDef((m.q_lora_rank,), (None,), init="ones")
+            defs["wq"] = ParamDef((m.q_lora_rank, h, m.nope_head_dim + m.rope_head_dim),
+                                  (None, "heads", None))
+        return defs
+    return {
+        # 'dmodel_rp' is inactive by default; enabling it (ParallelConfig.
+        # row_parallel_attn) shards the d_model contraction dim over
+        # `model` — the Megatron row-parallel fallback for head counts
+        # that do not divide the TP axis (e.g. llama4's 40 heads on 16).
+        "wq": ParamDef((d, h, hd), ("dmodel_rp", "heads", None)),
+        "wk": ParamDef((d, kvh, hd), ("dmodel_rp", "kv_heads", None)),
+        "wv": ParamDef((d, kvh, hd), ("dmodel_rp", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "dmodel_rp")),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Chunked (flash-style) attention — differentiable, O(chunk^2) memory
+# --------------------------------------------------------------------- #
+
+
+def _tile_pairs(nq: int, nk: int, causal: bool, cq: int, ck: int,
+                q_offset: int) -> np.ndarray:
+    pairs = []
+    for i in range(nq):
+        q_end = q_offset + (i + 1) * cq - 1
+        for j in range(nk):
+            if causal and j * ck > q_end:
+                continue
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32)
+
+
+def _pack(q, k, v, cq, ck):
+    """Pad seq dims to tile multiples; return (b,kvh,g,SQ,dh)/(b,kvh,SK,dh)."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    pq, pk = (-sq) % cq, (-sk) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, kvh, g, sq + pq, dh)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    return qf, kf, vf, (b, sq, sk, h, kvh, g, dh, pq, pk)
+
+
+def _tile_mask(s_shape, bias_d, i, j, cq, ck, q_offset, causal):
+    """Additive mask for tile (i, j); bias_d: (b,ck) slice of the length
+    bias. s_shape = (b,kvh,g,cq,ck)."""
+    m = bias_d[:, None, None, None, :]
+    if causal:
+        qpos = q_offset + i * cq + jnp.arange(cq)
+        kpos = j * ck + jnp.arange(ck)
+        m = m + jnp.where(kpos[None, :] <= qpos[:, None], 0.0, _NEG_INF
+                          )[None, None, None, :, :]
+    return m
+
+
+def _flash_fwd_scan(qf, kf, vf, bias, pairs, *, cq, ck, q_offset, causal,
+                    scale, unroll):
+    b, kvh, g, SQ, dh = qf.shape
+
+    m0 = jnp.full((b, kvh, g, SQ, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, SQ, 1), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, SQ, dh), jnp.float32)
+
+    def step(carry, ij):
+        m, l, acc = carry
+        i, j = ij[0], ij[1]
+        qd = jax.lax.dynamic_slice_in_dim(qf, i * cq, cq, axis=3)
+        kd = jax.lax.dynamic_slice_in_dim(kf, j * ck, ck, axis=2)
+        vd = jax.lax.dynamic_slice_in_dim(vf, j * ck, ck, axis=2)
+        bd = jax.lax.dynamic_slice_in_dim(bias, j * ck, ck, axis=1)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qd, kd) * scale
+        s = s + _tile_mask(s.shape, bd, i, j, cq, ck, q_offset, causal)
+        m_prev = jax.lax.dynamic_slice_in_dim(m, i * cq, cq, axis=3)
+        l_prev = jax.lax.dynamic_slice_in_dim(l, i * cq, cq, axis=3)
+        a_prev = jax.lax.dynamic_slice_in_dim(acc, i * cq, cq, axis=3)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        a_new = alpha * a_prev + jnp.einsum("bkgqc,bkcd->bkgqd", p, vd)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * cq, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * cq, axis=3)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * cq, axis=3)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs, unroll=unroll)
+    lsafe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / lsafe
+    lse = m + jnp.log(lsafe)           # (b,kvh,g,SQ,1)
+    return out, lse
+
+
+def _flash_bwd_scan(qf, kf, vf, bias, out, lse, dout, pairs, *, cq, ck,
+                    q_offset, causal, scale, unroll):
+    b, kvh, g, SQ, dh = qf.shape
+    SK = kf.shape[2]
+    delta = jnp.sum(out * dout, axis=-1, keepdims=True)      # (b,kvh,g,SQ,1)
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros_like(kf)
+    dv0 = jnp.zeros_like(vf)
+
+    def step(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij[0], ij[1]
+        qd = jax.lax.dynamic_slice_in_dim(qf, i * cq, cq, axis=3)
+        kd = jax.lax.dynamic_slice_in_dim(kf, j * ck, ck, axis=2)
+        vd = jax.lax.dynamic_slice_in_dim(vf, j * ck, ck, axis=2)
+        bd = jax.lax.dynamic_slice_in_dim(bias, j * ck, ck, axis=1)
+        lsed = jax.lax.dynamic_slice_in_dim(lse, i * cq, cq, axis=3)
+        deld = jax.lax.dynamic_slice_in_dim(delta, i * cq, cq, axis=3)
+        dod = jax.lax.dynamic_slice_in_dim(dout, i * cq, cq, axis=3)
+
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qd, kd) * scale
+        s = s + _tile_mask(s.shape, bd, i, j, cq, ck, q_offset, causal)
+        p = jnp.exp(s - lsed)                                # (b,kvh,g,cq,ck)
+        dvd = jnp.einsum("bkgqc,bkgqd->bkcd", p, dod)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", dod, vd)
+        ds = p * (dp - deld)
+        dqd = jnp.einsum("bkgqc,bkcd->bkgqd", ds, kd) * scale
+        dkd = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qd) * scale
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * cq, cq, axis=3) + dqd,
+            i * cq, axis=3)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * ck, ck, axis=2) + dkd,
+            j * ck, axis=2)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * ck, ck, axis=2) + dvd,
+            j * ck, axis=2)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), pairs, unroll=unroll)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll):
+    out, _ = _flash_core(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll)
+    return out
+
+
+def _flash_core(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll):
+    qf, kf, vf, meta = _pack(q, k, v, cq, ck)
+    b, sq, sk, h, kvh, g, dh, pq, pk = meta
+    nq, nk = qf.shape[3] // cq, kf.shape[2] // ck
+    pairs = jnp.asarray(_tile_pairs(nq, nk, causal, cq, ck, q_offset))
+    biasp = jnp.pad(bias, ((0, 0), (0, pk)), constant_values=_NEG_INF)
+    out, lse = _flash_fwd_scan(qf, kf, vf, biasp, pairs, cq=cq, ck=ck,
+                               q_offset=q_offset, causal=causal, scale=scale,
+                               unroll=unroll)
+    o = out.reshape(b, h, sq + pq, dh).transpose(0, 2, 1, 3)[:, :sq]
+    return o.astype(q.dtype), (out, lse, pairs)
+
+
+def _flash_fwd(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll):
+    o, res = _flash_core(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll)
+    return o, (q, k, v, bias) + res
+
+
+def _flash_bwd(cq, ck, q_offset, causal, scale, unroll, saved, do):
+    q, k, v, bias, out, lse, pairs = saved
+    qf, kf, vf, meta = _pack(q, k, v, cq, ck)
+    b, sq, sk, h, kvh, g, dh, pq, pk = meta
+    biasp = jnp.pad(bias, ((0, 0), (0, pk)), constant_values=_NEG_INF)
+    SQ = qf.shape[3]
+    dof = do.astype(jnp.float32).transpose(0, 2, 1, 3)   # (b, h, sq, dh)
+    if SQ != sq:
+        dof = jnp.pad(dof, ((0, 0), (0, 0), (0, SQ - sq), (0, 0)))
+    dof = dof.reshape(b, kvh, g, SQ, dh)
+    dq, dk, dv = _flash_bwd_scan(qf, kf, vf, biasp, out, lse, dof, pairs,
+                                 cq=cq, ck=ck, q_offset=q_offset,
+                                 causal=causal, scale=scale, unroll=unroll)
+    dq = dq.reshape(b, h, SQ, dh).transpose(0, 2, 1, 3)[:, :sq].astype(q.dtype)
+    dk = dk.transpose(0, 2, 1, 3)[:, :sk].astype(k.dtype)
+    dv = dv.transpose(0, 2, 1, 3)[:, :sk].astype(v.dtype)
+    return dq, dk, dv, jnp.zeros_like(bias)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk_q: int, chunk_k: int,
+                      q_offset: int = 0,
+                      lengths: Optional[jax.Array] = None,
+                      sm_scale: Optional[float] = None,
+                      unroll: int = 1) -> jax.Array:
+    """Flash attention in jnp with O(s*d) memory fwd AND bwd (custom
+    VJP recomputes p per tile).
+
+    q: (b, sq, h, dh); k, v: (b, sk, kvh, dh) -> (b, sq, h, dh).
+    ``q_offset``: global position of q[0]; ``lengths``: valid kv lengths.
+    ``unroll``: unroll factor for the tile scan (cost-analysis lowering).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    if lengths is None:
+        bias = jnp.zeros((b, sk), jnp.float32)
+    else:
+        bias = jnp.where(jnp.arange(sk)[None, :] < lengths[:, None], 0.0, _NEG_INF)
+    return _flash(q, k, v, bias, cq, ck, q_offset, causal, scale, unroll)
+
+
+def naive_attention(q, k, v, *, causal, lengths=None, q_offset=0,
+                    sm_scale=None) -> jax.Array:
+    """Reference/naive path (smoke tests and small shapes)."""
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(sk)
+    valid = jnp.ones((b, 1, 1, 1, sk), bool)
+    if lengths is not None:
+        valid = kpos[None, None, None, None, :] < lengths[:, None, None, None, None]
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        valid = valid & (kpos[None, None, None, None, :] <= qpos[None, None, None, :, None])
+    s = jnp.where(valid, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, sm_scale: Optional[float] = None) -> jax.Array:
+    """One-token attention over a (seq-sharded) dense cache.
+
+    q: (b, 1, h, dh); caches: (b, S, kvh, dh); lengths: (b,).
+    """
+    b, _, h, dh = q.shape
+    _, S, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(valid, s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)          # all-reduce over seq shards
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)          # all-reduce over seq shards
+    out = jnp.einsum("bkgs,bskd->bkgd", p / l, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# GQA layer (train / prefill / decode / cross)
+# --------------------------------------------------------------------- #
+
+
+def _attend(q, k, v, pcfg: ParallelConfig, *, causal, lengths=None, q_offset=0):
+    if pcfg.attention_impl == "naive":
+        return naive_attention(q, k, v, causal=causal, lengths=lengths, q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, chunk_q=pcfg.attention_chunk,
+                             chunk_k=pcfg.attention_chunk, lengths=lengths,
+                             q_offset=q_offset,
+                             unroll=True if pcfg.scan_unroll else 1)
+
+
+def _write_kv(cache, k, v, pos):
+    """Write (k, v) into pre-allocated (max_len) cache buffers at pos."""
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache
+
+
+def gqa_attention(cfg: ModelConfig, pcfg: ParallelConfig, p: Dict[str, jax.Array],
+                  x: jax.Array, positions: jax.Array, *,
+                  mode: str, causal: bool = True,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  write_pos: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None,
+                  memory: Optional[jax.Array] = None,
+                  is_cross: bool = False,
+                  use_rope: bool = True):
+    """Returns (out, new_cache).
+
+    mode: "train" | "prefill" | "decode".  ``is_cross``: k/v from
+    ``memory`` at train/prefill; from the (projected-memory) cache at
+    decode.  Self-attention prefill/decode writes k/v into the
+    pre-allocated ``cache`` buffers.
+    """
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    q = shard(q, "batch", None, "heads", None)
+
+    if is_cross and mode == "decode":
+        assert cache is not None
+        k, v = cache  # projected memory kv, stored at prefill
+        new_cache = cache
+    else:
+        kv_src = memory if is_cross else x
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, cast(p["wk"]))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, cast(p["wv"]))
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        new_cache = None
+
+    if use_rope and not is_cross:
+        sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        if not (is_cross and mode == "decode"):
+            k = apply_rope(k, sin, cos)   # decode: positions = write position
+
+    if is_cross:
+        mem_len = k.shape[1]
+        mem_lengths = jnp.full((x.shape[0],), mem_len, jnp.int32)
+        if mode == "decode":
+            out = decode_attention(q, k, v, mem_lengths)
+        else:
+            out = _attend(q, k, v, pcfg, causal=False)
+            if mode == "prefill":
+                cdt = cache[0].dtype if cache is not None else k.dtype
+                new_cache = (k.astype(cdt), v.astype(cdt))
+    elif mode == "decode":
+        assert cache is not None and write_pos is not None
+        k_cache, v_cache = _write_kv(cache, k, v, write_pos)
+        out = decode_attention(q, k_cache, v_cache, lengths)
+        new_cache = (k_cache, v_cache)
+    else:
+        out = _attend(q, k, v, pcfg, causal=causal, lengths=lengths)
+        if mode == "prefill" and cache is not None:
+            new_cache = _write_kv(cache, k, v, 0)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return shard(out, "batch", None, None), new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLA layer (DeepSeek-V2)
+# --------------------------------------------------------------------- #
+
+
+def _mla_q(cfg, p, x):
+    m = cfg.mla
+    if m.q_lora_rank:
+        from .layers import rmsnorm
+        cq = jnp.einsum("bsd,dr->bsr", x, cast(p["wq_a"]))
+        cq = rmsnorm(cq, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, cast(p["wq"]))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    return shard(q, "batch", None, "heads", None)
+
+
+def mla_attention(cfg: ModelConfig, pcfg: ParallelConfig, p: Dict[str, jax.Array],
+                  x: jax.Array, positions: jax.Array, *,
+                  mode: str,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  write_pos: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None):
+    """MLA: cache = (c_kv (b,S,r), k_rope (b,S,rope_dim))."""
+    from .layers import rmsnorm
+    m = cfg.mla
+    h = cfg.num_heads
+    q = _mla_q(cfg, p, x)                       # (b,s,h,nope+rope)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, cast(p["wkv_a"]))
+    c_kv, k_rope = ckv_full[..., :m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, p["ckv_norm"], cfg.norm_eps)
+
+    sin, cos = rope_sincos(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+
+    if mode == "decode":
+        assert cache is not None and write_pos is not None
+        ckv_cache, krope_cache = cache
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            ckv_cache, c_kv.astype(ckv_cache.dtype), write_pos, axis=1)
+        krope_cache = jax.lax.dynamic_update_slice_in_dim(
+            krope_cache, k_rope.astype(krope_cache.dtype), write_pos, axis=1)
+        # absorbed decode: q_latent = W_uk^T q_nope
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, cast(p["wk_b"]))
+        s = (jnp.einsum("bshr,bSr->bhS", q_lat.astype(jnp.float32),
+                        ckv_cache.astype(jnp.float32))
+             + jnp.einsum("bshk,bSk->bhS", q_rope.astype(jnp.float32),
+                          krope_cache.astype(jnp.float32))) * scale
+        S = ckv_cache.shape[1]
+        valid = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+        s = jnp.where(valid, s, _NEG_INF)
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        pr = jnp.exp(s - mx)
+        l = jnp.sum(pr, axis=-1, keepdims=True)
+        ctx = jnp.einsum("bhS,bSr->bhr", pr / l, ckv_cache.astype(jnp.float32))
+        out = jnp.einsum("bhr,rhv->bhv", ctx, cast(p["wv_b"]).astype(jnp.float32))
+        out = out[:, None].astype(x.dtype)      # (b,1,h,v)
+        new_cache = (ckv_cache, krope_cache)
+    else:
+        # expanded form: per-head k/v from the latent
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, cast(p["wk_b"]))
+        vv = jnp.einsum("bsr,rhv->bshv", c_kv, cast(p["wv_b"]))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], k_nope.shape[:3] + (m.rope_head_dim,))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk head dim for the shared attention helper, then slice
+        out = _attend(qq, k,
+                      jnp.pad(vv, ((0, 0), (0, 0), (0, 0),
+                                   (0, k.shape[-1] - vv.shape[-1]))),
+                      pcfg, causal=True, lengths=lengths)
+        out = out[..., :m.v_head_dim]
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache[0], c_kv.astype(cache[0].dtype), 0, axis=1)
+            krope_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache[1], k_rope.astype(cache[1].dtype), 0, axis=1)
+            new_cache = (ckv_cache, krope_cache)
+
+    y = jnp.einsum("bshv,hvd->bsd", out, cast(p["wo"]))
+    return shard(y, "batch", None, None), new_cache

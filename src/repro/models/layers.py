@@ -1,0 +1,107 @@
+"""Common neural layers: RMSNorm, rotary embeddings, gated MLPs,
+embeddings/logits — all sharding-annotated and bf16-compute.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from .params import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: jax.Array) -> jax.Array:
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ----------------------------- RMSNorm -------------------------------- #
+
+
+def rmsnorm_def(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    # Variance in fp32 (fused square+reduce), normalization applied in the
+    # input dtype: avoids materializing an fp32 copy of the activations,
+    # which would otherwise force fp32 storage of remat-saved layer inputs.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+# ----------------------------- RoPE ----------------------------------- #
+
+
+def rope_sincos(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., s) int32 -> sin/cos of shape (..., s, dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (b, s, h, d); sin/cos: (b, s, d//2) — GPT-NeoX half rotation."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    sin = sin[:, :, None, :].astype(x.dtype)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ----------------------------- MLP ------------------------------------ #
+
+
+def mlp_defs(d: int, ff: int, activation: str) -> Dict[str, ParamDef]:
+    defs = {
+        "up": ParamDef((d, ff), ("embed", "ff")),
+        "down": ParamDef((ff, d), ("ff", "embed")),
+    }
+    if activation in ("swiglu", "geglu"):
+        defs["gate"] = ParamDef((d, ff), ("embed", "ff"))
+    return defs
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array, activation: str) -> jax.Array:
+    """x: (b, s, d) -> (b, s, d); hidden sharded over 'ff' (TP)."""
+    up = jnp.einsum("bsd,df->bsf", x, cast(p["up"]))
+    up = shard(up, "batch", None, "ff")
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, cast(p["gate"]))
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    out = jnp.einsum("bsf,fd->bsd", h, cast(p["down"]))
+    return shard(out, "batch", None, None)
+
+
+# ----------------------------- Embedding ------------------------------ #
+
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    defs = {"tok": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="normal")}
+    if not cfg.tie_embeddings:
+        defs["out"] = ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="normal")
+    return defs
+
+
+def embed(p: Dict[str, jax.Array], tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = cast(jnp.take(p["tok"], tokens, axis=0))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", None, None)
+
+
+def logits_out(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+               fp32: bool = True) -> jax.Array:
+    table = p.get("out", p["tok"])
+    out = jnp.einsum("bsd,vd->bsv", x, cast(table))
+    out = shard(out, "batch", None, "vocab")
+    return out.astype(jnp.float32) if fp32 else out

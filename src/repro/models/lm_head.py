@@ -1,0 +1,107 @@
+"""Memory-efficient LM head: chunked fused softmax-cross-entropy.
+
+The fp32 logits tensor of a 256 K-vocab model at 4 K x 16 per-device
+tokens is ~4.2 GB; naive autodiff holds logits + softmax + dlogits
+simultaneously (~12 GB/device).  This custom-VJP computes the loss by
+scanning over sequence chunks (logits chunk is live only inside the
+step) and the backward recomputes each chunk's logits, emitting dx and
+accumulating dW — peak extra memory drops to one chunk (~0.5 GB).
+
+Semantics: sum of per-token NLL over non-ignored labels and the count,
+so the caller controls the mean.  Labels == IGNORE contribute zero.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+IGNORE = -100
+
+
+def _chunk_ce(x_c, table, labels_c):
+    """x_c: (b,c,d); table: (V,d); labels_c: (b,c) -> (nll_sum, cnt)."""
+    logits = jnp.einsum("bcd,vd->bcv", x_c.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    mask = labels_c != IGNORE
+    safe = jnp.where(mask, labels_c, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return nll.sum(), mask.sum()
+
+
+def _fused_fwd_impl(x, table, labels, chunk):
+    b, s, d = x.shape
+    nc = max(s // chunk, 1)
+    cs = s // nc
+    xs = x[:, : nc * cs].reshape(b, nc, cs, d).transpose(1, 0, 2, 3)
+    ls = labels[:, : nc * cs].reshape(b, nc, cs).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        nll, cnt = carry
+        x_c, l_c = inp
+        n, c = _chunk_ce(x_c, table, l_c)
+        return (nll + n, cnt + c), None
+
+    (nll, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (xs, ls))
+    if nc * cs < s:  # remainder
+        n, c = _chunk_ce(x[:, nc * cs:], table, labels[:, nc * cs:])
+        nll, cnt = nll + n, cnt + c
+    return nll, cnt
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_xent(x, table, labels, chunk=512):
+    return _fused_fwd_impl(x, table, labels, chunk)
+
+
+def _fwd(x, table, labels, chunk):
+    out = _fused_fwd_impl(x, table, labels, chunk)
+    return out, (x, table, labels)
+
+
+def _bwd(chunk, res, ct):
+    x, table, labels = res
+    dnll, _ = ct
+    b, s, d = x.shape
+    nc = max(s // chunk, 1)
+    cs = s // nc
+    xs = x[:, : nc * cs].reshape(b, nc, cs, d).transpose(1, 0, 2, 3)
+    ls = labels[:, : nc * cs].reshape(b, nc, cs).transpose(1, 0, 2)
+
+    def grad_chunk(x_c, l_c):
+        logits = jnp.einsum("bcd,vd->bcv", x_c.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        mask = l_c != IGNORE
+        safe = jnp.where(mask, l_c, 0)
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(safe, table.shape[0], dtype=jnp.float32)
+        dlog = (p - onehot) * (mask[..., None] * dnll)
+        dx_c = jnp.einsum("bcv,vd->bcd", dlog, table.astype(jnp.float32))
+        dW_c = jnp.einsum("bcv,bcd->vd", dlog, x_c.astype(jnp.float32))
+        return dx_c.astype(x.dtype), dW_c
+
+    from repro.distributed.sharding import shard as _shard
+
+    def step(dW, inp):
+        x_c, l_c = inp
+        dx_c, dW_c = grad_chunk(x_c, l_c)
+        return _shard(dW + dW_c, "vocab", None), dx_c
+
+    dW0 = _shard(jnp.zeros(table.shape, jnp.float32), "vocab", None)
+    dW, dxs = jax.lax.scan(step, dW0, (xs, ls))
+    dx = dxs.transpose(1, 0, 2, 3).reshape(b, nc * cs, d)
+    if nc * cs < s:
+        dx_r, dW_r = grad_chunk(x[:, nc * cs:], labels[:, nc * cs:])
+        dx = jnp.concatenate([dx, dx_r], axis=1)
+        dW = dW + dW_r
+    return dx, dW.astype(table.dtype), np.zeros(labels.shape, jax.dtypes.float0)
+
+
+fused_xent.defvjp(_fwd, _bwd)

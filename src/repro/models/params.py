@@ -1,0 +1,89 @@
+"""Parameter descriptors: one definition drives init, sharding and shape
+checking.
+
+A model module builds a pytree of :class:`ParamDef` (shape + logical axes
++ initializer).  From that single tree we derive:
+
+* ``init_params``  — materialized arrays (fp32 masters),
+* ``param_specs``  — `PartitionSpec` tree (TP rules + FSDP), via
+  `repro.distributed.sharding.resolve_spec`,
+* analytic parameter counts (cross-checked against `ModelConfig.param_count`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import resolve_spec
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    laxes: Tuple[Optional[str], ...]
+    init: str = "fan_in"     # fan_in | normal | zeros | ones | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.laxes), (self.shape, self.laxes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64))
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stacked(defs: Any, n: int) -> Any:
+    """Prepend a scan dim of length n to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.laxes, d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def _materialize(d: ParamDef, key: jax.Array, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * (0.02 * d.scale)).astype(dtype)
+    if d.init == "small":
+        return (jax.random.normal(key, d.shape, jnp.float32) * (0.006 * d.scale)).astype(dtype)
+    # fan_in: truncated-normal-ish scaled by 1/sqrt(fan_in); fan_in is the
+    # second-to-last dim for stacked defs, first dim otherwise.
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[0]
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(defs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_specs(defs: Any) -> Any:
+    """PartitionSpec tree (requires an active sharding_env)."""
+    return jax.tree.map(
+        lambda d: resolve_spec(d.shape, d.laxes, fsdp_hint=True),
+        defs, is_leaf=is_def)
+
+
+def param_count(defs: Any) -> int:
+    return sum(d.size for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def abstract_params(defs: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)

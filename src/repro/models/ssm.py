@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024, arXiv:2405.21060):
+sequence is split into chunks of Q tokens; intra-chunk outputs use the
+quadratic dual form (a masked (Q, Q) kernel — MXU-friendly), inter-chunk
+contributions flow through a per-chunk state recurrence (a short
+`lax.scan` of length S/Q).  Decode carries (conv_state, ssm_state) and
+costs O(1) per token — this is why `mamba2-1.3b` (and the Mamba layers
+of Jamba) run the `long_500k` cell.
+
+Layout: d_inner = expand*d, H = d_inner/P heads, state N per head.
+Heads are sharded over `model` (TP); batch over `data`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import shard
+from .layers import cast, rmsnorm
+from .params import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return {
+        # fused in_proj -> [z, x, B, C, dt]
+        "in_proj": ParamDef((d, 2 * d_in + 2 * s.state_dim + nheads), ("embed", "ff")),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "ff")),
+        "conv_b": ParamDef((conv_ch,), ("ff",), init="zeros"),
+        "a_log": ParamDef((nheads,), ("heads",), init="zeros"),
+        "dt_bias": ParamDef((nheads,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((nheads,), ("heads",), init="ones"),
+        "out_norm": ParamDef((d_in,), ("ff",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("ff", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, y: jax.Array):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    z, xbc_dt = jnp.split(y, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * s.state_dim], axis=-1)
+    return z, xbc, dt, d_in, nheads
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv; returns (out, new_conv_state).
+
+    xbc: (bsz, s, ch); w: (W, ch); conv_state: (bsz, W-1, ch)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None, :] for i in range(W))
+    out = jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll=1):
+    """Chunked SSD: one scan over chunks carrying the inter-chunk state.
+
+    Per chunk the quadratic dual form runs on (Q, Q) tiles (MXU-sized);
+    the body is checkpointed so training memory stays O(b*s*h*p + state)
+    instead of O(b*s*Q*h) tile residuals.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative); B, C: (b, s, n).
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    Q = chunk
+
+    # (nc, b, Q, ...) scan inputs
+    xq = x.reshape(b, nc, Q, h, p).transpose(1, 0, 2, 3, 4)
+    dtq = dt.reshape(b, nc, Q, h).transpose(1, 0, 2, 3)
+    Bq = B.reshape(b, nc, Q, n).transpose(1, 0, 2, 3)
+    Cq = C.reshape(b, nc, Q, n).transpose(1, 0, 2, 3)
+    ii = jnp.arange(Q)
+    tril = (ii[:, None] >= ii[None, :])[None, :, :, None]     # (1,Q,Q,1)
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc = inp                                 # (b,Q,...)
+        dA = dtc * A[None, None, :]                           # (b,Q,h) log-decay
+        cum = jnp.cumsum(dA, axis=1)
+        li = cum[:, :, None, :]
+        lj = cum[:, None, :, :]
+        L = jnp.where(tril, jnp.exp(li - lj), 0.0)            # (b,Q,Q,h)
+        G = jnp.einsum("bin,bjn->bij", Cc.astype(jnp.float32),
+                       Bc.astype(jnp.float32))                # (b,Q,Q)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]         # (b,Q,h,p)
+        y = jnp.einsum("bijh,bij,bjhp->bihp", L, G, xdt)      # intra
+        dfs = jnp.exp(cum)                                    # decay from start
+        y = y + jnp.einsum("bin,bhpn,bih->bihp",
+                           Cc.astype(jnp.float32), state, dfs)
+        dte = jnp.exp(cum[:, -1:, :] - cum)                   # decay to end
+        S_c = jnp.einsum("bjn,bjh,bjhp->bhpn", Bc.astype(jnp.float32),
+                         dte, xdt)
+        new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + S_c
+        return new_state, y.astype(x.dtype)
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, ys = jax.lax.scan(body, init, (xq, dtq, Bq, Cq),
+                                   unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * Q, h, p)[:, :s]
+    return y, final_state
+
+
+def ssm_layer(cfg: ModelConfig, pcfg: ParallelConfig, p: Dict[str, jax.Array],
+              x: jax.Array, *, mode: str,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Mamba-2 mixer. Returns (out, new_cache).
+
+    cache = (conv_state (b, W-1, ch), ssm_state (b, h, p, n)).
+    """
+    s_cfg = cfg.ssm
+    y = jnp.einsum("bsd,dk->bsk", x, cast(p["in_proj"]))
+    y = shard(y, "batch", None, "ff")
+    z, xbc, dt, d_in, nheads = _split_in_proj(cfg, y)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        assert cache is not None
+        conv_state, ssm_state = cache
+        xbc_conv, new_conv = _causal_conv(xbc, cast(p["conv_w"]), p["conv_b"],
+                                          conv_state)
+        xx, B, C = jnp.split(xbc_conv, [d_in, d_in + s_cfg.state_dim], axis=-1)
+        xh = xx.reshape(*xx.shape[:2], nheads, s_cfg.head_dim)
+        # single-step recurrence (s == 1)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                    # (b,h)
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", B[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        new_state = ssm_state * dA[:, :, None, None] + dBx
+        yh = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), new_state)
+        yh = yh[:, None]                                       # (b,1,h,p)
+        new_cache = (new_conv.astype(conv_state.dtype),
+                     new_state.astype(ssm_state.dtype))
+        final = None
+    else:
+        xbc_conv, new_conv = _causal_conv(xbc, cast(p["conv_w"]), p["conv_b"])
+        xx, B, C = jnp.split(xbc_conv, [d_in, d_in + s_cfg.state_dim], axis=-1)
+        xh = xx.reshape(*xx.shape[:2], nheads, s_cfg.head_dim)
+        if pcfg.ssd_unroll:
+            ssd_unroll = pcfg.ssd_unroll
+        else:
+            ssd_unroll = True if pcfg.scan_unroll else 1
+        yh, final = _ssd_chunked(xh, dt, A, B, C, s_cfg.chunk_size,
+                                 unroll=ssd_unroll)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = (new_conv, final)
+
+    yh = yh.astype(x.dtype) + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    yflat = yh.reshape(*yh.shape[:2], d_in)
+    yflat = rmsnorm(yflat * jax.nn.silu(z.astype(jnp.float32)).astype(yflat.dtype),
+                    p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", yflat, cast(p["out_proj"]))
+    return shard(out, "batch", None, None), new_cache

@@ -1,0 +1,347 @@
+"""Model assembly for every assigned architecture family.
+
+All families are built from the same sub-layer vocabulary
+(attention / MLA / Mamba-2 / MLP / MoE, each pre-RMSNormed) arranged
+into *layer groups*.  A group is (count, layer-kind-signature); its
+parameters are stacked along a leading `layers` dim and the group is
+executed with `jax.lax.scan` (+ configurable remat), which keeps the HLO
+size O(1) in depth — essential for compiling 398 B-param configs.
+
+Families -> groups:
+  dense / vlm        [(L, attn+mlp)]
+  moe                [(k, attn+mlp), (L-k, attn+moe)]   (k = first dense)
+  moe + MLA          same, attention = MLA
+  ssm                [(L, mamba)]
+  hybrid (jamba)     [(L/8, superblock of 8 sublayers: attn at index 3,
+                       mamba elsewhere; MoE on odd sublayers, MLP on even)]
+  encdec             encoder [(Le, attn+mlp non-causal)],
+                     decoder [(Ld, self-attn + cross-attn + mlp)]
+
+KV caches are pytrees stacked along the same `layers` dim and scanned
+together with the parameters.  `mode` is one of train | prefill | decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import shard
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (cast, embed, embed_defs, logits_out, mlp, mlp_defs,
+                     rmsnorm, rmsnorm_def)
+from .params import ParamDef, stacked
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- #
+# Layer kinds
+# --------------------------------------------------------------------- #
+
+
+def _sublayer_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind == "attn":
+        return {"norm": rmsnorm_def(d), "attn": attn_mod.attn_defs(cfg)}
+    if kind == "mla":
+        return {"norm": rmsnorm_def(d), "attn": attn_mod.attn_defs(cfg)}
+    if kind == "mamba":
+        return {"norm": rmsnorm_def(d), "ssm": ssm_mod.ssm_defs(cfg)}
+    if kind == "mlp":
+        return {"norm": rmsnorm_def(d), "mlp": mlp_defs(d, cfg.d_ff, cfg.activation)}
+    if kind == "moe":
+        return {"norm": rmsnorm_def(d), "moe": moe_mod.moe_defs(cfg)}
+    if kind == "cross":
+        return {"norm": rmsnorm_def(d), "attn": attn_mod.attn_defs(cfg)}
+    raise ValueError(kind)
+
+
+def _layer_defs(cfg: ModelConfig, layer_kind: Tuple[str, ...]) -> Dict[str, Any]:
+    return {f"{i}_{k}": _sublayer_defs(cfg, k) for i, k in enumerate(layer_kind)}
+
+
+def layer_groups(cfg: ModelConfig) -> Tuple[Tuple[int, Tuple[str, ...]], ...]:
+    """((count, (sublayer kinds...)), ...) per family."""
+    L = cfg.num_layers
+    if cfg.family in ("dense", "vlm"):
+        return ((L, ("attn", "mlp")),)
+    if cfg.family == "moe":
+        attn = "mla" if cfg.mla else "attn"
+        k = cfg.moe.first_dense_layers
+        groups = []
+        if k:
+            groups.append((k, (attn, "mlp")))
+        groups.append((L - k, (attn, "moe")))
+        return tuple(groups)
+    if cfg.family == "ssm":
+        return ((L, ("mamba",)),)
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        kinds = []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 - 1 else "mamba"
+            ffn = "moe" if (i % 2 == 1 and cfg.moe) else "mlp"
+            kinds.extend([mixer, ffn])
+        return ((L // period, tuple(kinds)),)
+    if cfg.family == "encdec":
+        return ((cfg.enc_layers, ("attn", "mlp")),
+                (cfg.dec_layers, ("attn", "cross", "mlp")))
+    raise ValueError(cfg.family)
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg),
+                            "final_norm": rmsnorm_def(cfg.d_model)}
+    for gi, (count, kinds) in enumerate(layer_groups(cfg)):
+        defs[f"group{gi}"] = stacked(_layer_defs(cfg, kinds), count)
+    if cfg.family == "vlm" or cfg.num_patch_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        if cfg.family != "encdec":
+            defs["patch_proj"] = ParamDef((fd, cfg.d_model), (None, "embed"))
+    if cfg.family == "encdec":
+        fd = cfg.frontend_dim or cfg.d_model
+        defs["frame_proj"] = ParamDef((fd, cfg.d_model), (None, "embed"))
+        defs["enc_final_norm"] = rmsnorm_def(cfg.d_model)
+    return defs
+
+
+# --------------------------------------------------------------------- #
+# Caches
+# --------------------------------------------------------------------- #
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0, kv_dtype=None) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the decode cache (also used to allocate).
+
+    ``kv_dtype``: attention-cache dtype override (e.g. fp8_e4m3 for the
+    quantized-KV optimization; SSM/conv states keep their dtypes)."""
+    hd = cfg.resolved_head_dim
+    kvd = kv_dtype or CACHE_DTYPE
+    spec: Dict[str, Any] = {}
+
+    def attn_cache():
+        if cfg.mla:
+            m = cfg.mla
+            return (jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), kvd),
+                    jax.ShapeDtypeStruct((batch, max_len, m.rope_head_dim), kvd))
+        return (jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), kvd),
+                jax.ShapeDtypeStruct((batch, max_len, cfg.num_kv_heads, hd), kvd))
+
+    def ssm_cache():
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        ch = d_in + 2 * s.state_dim
+        return (jax.ShapeDtypeStruct((batch, s.conv_width - 1, ch), CACHE_DTYPE),
+                jax.ShapeDtypeStruct((batch, nheads, s.head_dim, s.state_dim), jnp.float32))
+
+    def cross_cache():
+        return (jax.ShapeDtypeStruct((batch, enc_len, cfg.num_kv_heads, hd), CACHE_DTYPE),
+                jax.ShapeDtypeStruct((batch, enc_len, cfg.num_kv_heads, hd), CACHE_DTYPE))
+
+    for gi, (count, kinds) in enumerate(layer_groups(cfg)):
+        if cfg.family == "encdec" and gi == 0:
+            continue  # encoder holds no cache
+        g: Dict[str, Any] = {}
+        for i, k in enumerate(kinds):
+            if k in ("attn", "mla"):
+                g[f"{i}_{k}"] = attn_cache()
+            elif k == "mamba":
+                g[f"{i}_{k}"] = ssm_cache()
+            elif k == "cross":
+                g[f"{i}_{k}"] = cross_cache()
+        if g:
+            spec[f"group{gi}"] = jax.tree.map(
+                lambda s_, c=count: jax.ShapeDtypeStruct((c,) + s_.shape, s_.dtype), g)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, enc_len))
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """PartitionSpecs for the cache: batch over data axes, seq over model
+    (sequence parallelism for long KV)."""
+    from repro.distributed.sharding import resolve_spec
+    spec = cache_spec(cfg, batch, max_len, enc_len)
+
+    def one(s: jax.ShapeDtypeStruct):
+        # (layers, batch, seq?, ...) — rank-dependent logical axes
+        if len(s.shape) == 4 and s.shape[2] in (max_len, enc_len):
+            la = ("layers", "batch", "seq", None)
+        elif len(s.shape) == 5:
+            la = ("layers", "batch", "seq", None, None)
+        elif len(s.shape) == 3:
+            la = ("layers", "batch", None)
+        else:
+            la = ("layers", "batch") + (None,) * (len(s.shape) - 2)
+        return resolve_spec(s.shape, la)
+
+    return jax.tree.map(one, spec)
+
+
+# --------------------------------------------------------------------- #
+# Sub-layer dispatch
+# --------------------------------------------------------------------- #
+
+
+def _run_sublayer(cfg, pcfg, kind, p, x, positions, *, mode, cache, write_pos,
+                  lengths, memory, causal):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mla":
+        out, new_cache = attn_mod.mla_attention(
+            cfg, pcfg, p["attn"], h, positions, mode=mode, cache=cache,
+            write_pos=write_pos, lengths=lengths)
+    elif kind == "attn":
+        out, new_cache = attn_mod.gqa_attention(
+            cfg, pcfg, p["attn"], h, positions, mode=mode, causal=causal,
+            cache=cache, write_pos=write_pos, lengths=lengths)
+    elif kind == "cross":
+        out, new_cache = attn_mod.gqa_attention(
+            cfg, pcfg, p["attn"], h, positions, mode=mode, causal=False,
+            cache=cache, write_pos=write_pos, lengths=None, memory=memory,
+            is_cross=True)
+    elif kind == "mamba":
+        out, new_cache = ssm_mod.ssm_layer(cfg, pcfg, p["ssm"], h, mode=mode,
+                                           cache=cache)
+    elif kind == "mlp":
+        out, new_cache = mlp(p["mlp"], h, cfg.activation), None
+    elif kind == "moe":
+        out, aux = moe_mod.moe_layer(cfg, pcfg, p["moe"], h)
+        new_cache = None
+    else:
+        raise ValueError(kind)
+    return x + out, new_cache, aux
+
+
+def _run_group(cfg, pcfg, kinds, gparams, x, positions, *, mode, gcache,
+               write_pos, lengths, memory, causal):
+    """Scan one stacked layer group."""
+
+    cached_kinds = [f"{i}_{k}" for i, k in enumerate(kinds)
+                    if f"{i}_{k}" in (gcache or {})]
+
+    def body(carry, xs):
+        h, aux_sum = carry
+        p_layer, c_layer = xs
+        new_c = dict(c_layer)
+        for i, k in enumerate(kinds):
+            key = f"{i}_{k}"
+            sub_cache = c_layer.get(key) if c_layer else None
+            h, nc, aux = _run_sublayer(
+                cfg, pcfg, k, p_layer[key], h, positions, mode=mode,
+                cache=sub_cache, write_pos=write_pos, lengths=lengths,
+                memory=memory, causal=causal)
+            if key in (c_layer or {}):
+                new_c[key] = nc if nc is not None else sub_cache
+            aux_sum = aux_sum + aux
+        return (h, aux_sum), new_c
+
+    if pcfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif pcfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    gcache_in = gcache if gcache else {}
+    (x, aux), new_gcache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        (gparams, gcache_in),
+                                        unroll=True if pcfg.scan_unroll else 1)
+    return x, (new_gcache if gcache else None), aux
+
+
+# --------------------------------------------------------------------- #
+# Forward entry points
+# --------------------------------------------------------------------- #
+
+
+def _input_embed(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Token (+ modality-stub) embedding; returns (x, positions)."""
+    x = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.num_patch_tokens and "patch_embeds" in batch and cfg.family != "encdec":
+        pe = cast(jnp.einsum("bpe,ed->bpd", batch["patch_embeds"],
+                             cast(params["patch_proj"])))
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                     x.shape[:2])
+    return shard(x, "batch", None, None), positions
+
+
+def _encoder(cfg, pcfg, params, batch):
+    frames = cast(jnp.einsum("bse,ed->bsd", batch["frames"],
+                             cast(params["frame_proj"])))
+    frames = shard(frames, "batch", None, None)
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32),
+                           frames.shape[:2])
+    count, kinds = layer_groups(cfg)[0]
+    h, _, _ = _run_group(cfg, pcfg, kinds, params["group0"], frames, pos,
+                         mode="train", gcache=None, write_pos=None,
+                         lengths=None, memory=None, causal=False)
+    return rmsnorm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, pcfg: ParallelConfig, params,
+            batch: Dict[str, jax.Array], *, mode: str,
+            cache: Optional[Dict[str, Any]] = None,
+            write_pos: Optional[jax.Array] = None,
+            lengths: Optional[jax.Array] = None):
+    """Unified forward.
+
+    train:   returns (logits, aux)
+    prefill: returns (logits_last, new_cache, aux)
+    decode:  returns (logits, new_cache)   [batch tokens are (b, 1)]
+    """
+    memory = None
+    if cfg.family == "encdec":
+        if mode == "decode":
+            memory = None  # cross kv comes from the cache
+        else:
+            memory = _encoder(cfg, pcfg, params, batch)
+
+    x, positions = _input_embed(cfg, params, batch)
+    if mode == "decode" and lengths is not None:
+        # lengths counts the context INCLUDING the token being decoded,
+        # whose absolute position is therefore lengths - 1.
+        positions = (lengths[:, None] - 1).astype(jnp.int32)
+
+    groups = layer_groups(cfg)
+    new_cache: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    start_g = 1 if cfg.family == "encdec" else 0
+    for gi in range(start_g, len(groups)):
+        count, kinds = groups[gi]
+        gname = f"group{gi}"
+        gcache = (cache or {}).get(gname)
+        x, ngc, aux = _run_group(
+            cfg, pcfg, kinds, params[gname], x, positions, mode=mode,
+            gcache=gcache, write_pos=write_pos, lengths=lengths,
+            memory=memory, causal=True)
+        if ngc is not None:
+            new_cache[gname] = ngc
+        aux_total = aux_total + aux
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    if mode == "features":
+        return x, aux_total
+    if mode == "train":
+        logits = logits_out(params["embed"], x, cfg, fp32=pcfg.logits_fp32)
+        return logits, aux_total
+    if mode == "prefill":
+        logits = logits_out(params["embed"], x[:, -1:], cfg, fp32=pcfg.logits_fp32)
+        return logits, new_cache, aux_total
+    logits = logits_out(params["embed"], x, cfg, fp32=pcfg.logits_fp32)
+    return logits, new_cache

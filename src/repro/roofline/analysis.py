@@ -1,0 +1,191 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (EXPERIMENTS.md
+§Roofline):
+
+  compute    = HLO_FLOPs / (chips x peak)          [cost_analysis]
+  memory     = HLO_bytes / (chips x HBM bw)        [cost_analysis]
+  collective = collective_bytes / (chips x link bw)  [parsed from HLO]
+
+cost_analysis on the SPMD-partitioned module reports *per-device* FLOPs
+and bytes, so `chips` is already folded in — we verify that convention
+against analytic MODEL_FLOPS and record the ratio (useful-compute
+fraction: catches remat recompute and dispatch waste).
+
+collective_bytes is parsed from the compiled HLO text: the sum over
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-
+permute of the op's output tensor bytes (all-reduce counted twice —
+ring reduce+broadcast moves ~2x payload per chip).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of 'f32[16,128]' or tuple '(f32[4], bf16[8,2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind from HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g. %ag = f32[8,128]{1,0} all-gather(...), or tuple outputs
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        base = opname.rstrip(".0123456789")
+        # normalize e.g. 'all-gather-start', 'all-reduce-done'
+        for kind in _COLLECTIVES:
+            if base == kind or base == kind + "-start":
+                out[kind] += _shape_bytes(shape_str)
+                counts[kind] += 1
+                break
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+def collective_bytes_total(parsed: Dict[str, int]) -> int:
+    total = 0
+    for k in _COLLECTIVES:
+        mult = 2 if k == "all-reduce" else 1
+        total += mult * parsed.get(k, 0)
+    return total
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    coll_bytes: float            # per-chip collective bytes
+    chips: int
+    model_flops: float = 0.0     # analytic useful flops (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / hw.ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO flops (global)."""
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / (self.flops * self.chips)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time — the score we hillclimb."""
+        if not self.model_flops:
+            return 0.0
+        t_useful = self.model_flops / (self.chips * hw.PEAK_FLOPS_BF16)
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, param_count: int) -> float:
+    """Analytic useful FLOPs for the step (6ND for train; 2ND x tokens
+    for inference; + attention terms)."""
+    n_active = active_params(cfg, param_count)
+    hd = cfg.resolved_head_dim
+
+    def attn_flops(tokens: int, kv_len_avg: float) -> float:
+        # 2 * (QK^T + PV) = 4 * tokens * kv_len * h * hd  (causal halves it)
+        n_attn_layers = num_attn_layers(cfg)
+        return 4.0 * tokens * kv_len_avg * cfg.num_heads * hd * n_attn_layers
+
+    if shape.kind == "train":
+        base = 6.0 * n_active * shape.tokens
+        base += 3.0 * attn_flops(shape.tokens, shape.seq_len / 2)
+        return base
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens + attn_flops(shape.tokens, shape.seq_len / 2)
+    # decode: one token per sequence
+    toks = shape.global_batch
+    return 2.0 * n_active * toks + attn_flops(toks, shape.seq_len)
+
+
+def num_attn_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.enc_layers + 2 * cfg.dec_layers
+    return cfg.num_layers
+
+
+def active_params(cfg, total: int) -> float:
+    """Active parameters per token (MoE: only routed top-k + shared)."""
+    if not cfg.moe:
+        return float(total)
+    m = cfg.moe
+    mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    expert_p = mult * cfg.d_model * m.expert_d_ff
+    if cfg.family == "moe":
+        n_moe = cfg.num_layers - m.first_dense_layers
+    else:  # hybrid: MoE on odd sublayers = half the layers
+        n_moe = cfg.num_layers // 2
+    inactive = n_moe * (m.num_experts - m.top_k) * expert_p
+    return float(total - inactive)

@@ -1,0 +1,8 @@
+"""Target hardware constants (TPU v5e) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip, FLOP/s
+HBM_BW = 819e9               # per chip, B/s
+ICI_LINK_BW = 50e9           # per link, B/s (roofline formula uses 1 link/chip)
+
+# per-device HBM capacity (fit check)
+HBM_BYTES = 16 * 1024 ** 3

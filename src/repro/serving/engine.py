@@ -1,0 +1,242 @@
+"""Continuous-batching serving engine over the paged PiM KV cache.
+
+Request lifecycle: queue -> prefill (model prefill pass, KV written into
+arena pages) -> decode rounds (paged attention over block tables, one
+token per active sequence per round, new arrivals join between rounds)
+-> finish (pages freed with pim_init, stats recorded).
+
+The engine runs the *paged* attention path: per-layer KV lives only in
+the arena; the model's dense-cache path is never materialized.  Forking
+(`n>1` samples sharing a prompt) uses the cache's RowClone CoW.
+Sampling consumes the D-RaNGe TPU generator (`pim_rand`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.kernels.drange import ops as dr_ops
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.models import transformer as T
+from repro.models import attention as attn_mod
+from repro.models.layers import rmsnorm, cast, logits_out, embed, apply_rope, rope_sincos
+from .kv_cache import PagedKVCache
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                    # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 1.0
+    share_with: Optional[int] = None      # prefix sharing source
+    shared_len: int = 0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class PagedEngine:
+    """Single-host engine for GQA decoder-only models (the paged path)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, page_size: int = 16,
+                 num_pages: int = 256, pcfg: Optional[ParallelConfig] = None,
+                 seed: int = 0, use_pallas: bool = False):
+        assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg or ParallelConfig(attention_impl="naive", remat="none")
+        self.cache = PagedKVCache(cfg, num_pages=num_pages,
+                                  page_size=page_size, use_pallas=use_pallas)
+        self.use_pallas = use_pallas
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.rng_seed = jnp.asarray([seed, seed ^ 0x9E3779B9], jnp.uint32)
+        self.rng_ctr = 0
+        self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0}
+
+    # ----------------------------- API -------------------------------- #
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_rounds: int = 1000) -> Dict[int, List[int]]:
+        results: Dict[int, List[int]] = {}
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            while self.queue:
+                self._prefill(self.queue.pop(0))
+            self._decode_round()
+            rounds += 1
+            for rid in list(self.active):
+                r = self.active[rid]
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    results[rid] = r.out_tokens
+                    self.cache.free(rid)
+                    del self.active[rid]
+        return results
+
+    # --------------------------- internals ----------------------------- #
+
+    def _layer_params(self):
+        return self.params["group0"]
+
+    def _prefill(self, req: Request) -> None:
+        cfg, p = self.cfg, self.params
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        seq = self.cache.create(req.req_id, len(req.prompt),
+                                share_with=req.share_with,
+                                shared_len=req.shared_len)
+        start = seq.shared_prefix_pages * self.cache.page_size
+        # full prefill forward (dense prefill math), then write kv pages
+        max_len = len(req.prompt)
+        cache = T.init_cache(cfg, 1, max_len)
+        logits, dense_cache, _ = T.forward(
+            cfg, self.pcfg, p, {"tokens": toks}, mode="prefill", cache=cache,
+            lengths=jnp.asarray([max_len], jnp.int32))
+        g = dense_cache["group0"]
+        # g: {i_attn: (k,v)} stacked (L, 1, S, kvh, hd)
+        for key, (k, v) in g.items():
+            kk = k[:, 0].transpose(0, 1, 2, 3)       # (L, S, kvh, hd)
+            self.cache.write_prompt_kv(seq, kk[:, start:max_len],
+                                       v[:, 0][:, start:max_len], start=start)
+        tok = self._sample(logits[:, -1], req.temperature)
+        req.out_tokens.append(int(tok[0]))
+        self.active[req.req_id] = req
+        self.stats["prefills"] += 1
+
+    def _decode_round(self) -> None:
+        if not self.active:
+            return
+        cfg, p = self.cfg, self.params
+        rids = sorted(self.active)
+        last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
+                           jnp.int32)
+        # reserve the slot for the incoming token on every sequence
+        for r in rids:
+            self.cache.ensure_writable_tail(self.cache.seqs[r])
+        max_pages = max(len(self.cache.seqs[r].pages) for r in rids)
+        bt, lens = self.cache.block_table(rids, max_pages)
+
+        logits, k_new, v_new = _paged_decode_forward(
+            cfg, self.pcfg, p, last, self.cache.k_arena, self.cache.v_arena,
+            bt, lens, use_pallas=self.use_pallas)
+
+        # write the new kv at slot `length` (page already reserved)
+        for i, r in enumerate(rids):
+            seq = self.cache.seqs[r]
+            page = seq.pages[-1]
+            slot = seq.length % self.cache.page_size
+            self.cache.k_arena = self.cache.k_arena.at[:, page, slot].set(
+                k_new[:, i, 0].astype(self.cache.dtype))
+            self.cache.v_arena = self.cache.v_arena.at[:, page, slot].set(
+                v_new[:, i, 0].astype(self.cache.dtype))
+            seq.length += 1
+        sampled = self._sample(logits[:, 0], 1.0)
+        greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, r in enumerate(rids):
+            t = self.active[r].temperature
+            self.active[r].out_tokens.append(int(greedy[i] if t == 0.0
+                                                 else sampled[i]))
+        self.stats["decode_rounds"] += 1
+        self.stats["tokens_out"] += len(rids)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        if temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        # D-RaNGe randomness: uniform from the pim TRNG kernel
+        self.rng_ctr += 1
+        u = dr_ops.pim_random_uniform(
+            self.rng_seed + jnp.uint32(self.rng_ctr), logits.shape[0], 1,
+            use_pallas=self.use_pallas)[:, 0]
+        probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        return np.asarray(jnp.argmax(cum > u[:, None], axis=-1))
+
+
+def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
+                          v_arena, block_tables, lengths, *,
+                          use_pallas: bool = False):
+    """Decoder forward for one token using paged attention per layer.
+
+    Returns (logits (b,1,V), k_new, v_new (L, b, 1, kvh, hd)).
+    Python loop over layers (host engine; CPU-scale models).
+    """
+    hd = cfg.resolved_head_dim
+    x = embed(params["embed"], tokens, cfg)
+    positions = lengths[:, None].astype(jnp.int32)  # token pos == length
+    gparams = params["group0"]
+    L = T.layer_groups(cfg)[0][0]
+    kinds = T.layer_groups(cfg)[0][1]
+    k_news, v_news = [], []
+    for li in range(L):
+        p_layer = jax.tree.map(lambda a: a[li], gparams)
+        for i, kind in enumerate(kinds):
+            sp = p_layer[f"{i}_{kind}"]
+            h = rmsnorm(x, sp["norm"], cfg.norm_eps)
+            if kind == "attn":
+                q = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wq"]))
+                k = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wk"]))
+                v = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wv"]))
+                sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+                k_news.append(k[:, 0][None])   # (1, b, kvh, hd)
+                v_news.append(v[:, 0][None])
+                # attention over arena pages + the fresh token (not yet
+                # written): paged part + correction term
+                o_paged = pa_ops.paged_attention(
+                    q[:, 0], k_arena[li], v_arena[li],
+                    block_tables, lengths, use_pallas=use_pallas,
+                    sm_scale=hd ** -0.5, interpret=True)
+                # include self-attention to the current token via the
+                # streaming softmax merge
+                o = _merge_self_token(q[:, 0], k[:, 0], v[:, 0], o_paged,
+                                      k_arena[li], v_arena[li],
+                                      block_tables, lengths, hd)
+                out = jnp.einsum("bshk,hkd->bsd", o[:, None], cast(sp["attn"]["wo"]))
+            else:
+                from repro.models.layers import mlp
+                out = mlp(sp["mlp"], h, cfg.activation)
+            x = x + out
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_out(params["embed"], x, cfg)
+    k_new = jnp.concatenate(k_news, axis=0)[:, :, None]   # (L, b, 1, kvh, hd)
+    v_new = jnp.concatenate(v_news, axis=0)[:, :, None]
+    return logits, k_new, v_new
+
+
+def _merge_self_token(q, k_self, v_self, o_paged, k_arena, v_arena, bt, lens, hd):
+    """Numerically merge paged attention (history) with the current
+    token's self-attention using log-sum-exp streaming combination."""
+    b, h, d = q.shape
+    kvh = k_self.shape[1]
+    g = h // kvh
+    scale = hd ** -0.5
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    # history lse: recompute from arena (small b on host engine)
+    khist = k_arena[bt]                                  # (b, P, ps, kvh, hd)
+    vhist = v_arena[bt]
+    P, ps = khist.shape[1], khist.shape[2]
+    khist = khist.reshape(b, P * ps, kvh, d)
+    s_hist = jnp.einsum("bkgd,bskd->bkgs", qg, khist.astype(jnp.float32)) * scale
+    pos = jnp.arange(P * ps)[None, None, None, :]
+    s_hist = jnp.where(pos < lens[:, None, None, None], s_hist, -1e30)
+    m_hist = jnp.max(s_hist, axis=-1)
+    l_hist = jnp.sum(jnp.exp(s_hist - m_hist[..., None]), axis=-1)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg,
+                        k_self.astype(jnp.float32)) * scale
+    m_new = jnp.maximum(m_hist, s_self)
+    l_new = l_hist * jnp.exp(m_hist - m_new) + jnp.exp(s_self - m_new)
+    w_hist = (l_hist * jnp.exp(m_hist - m_new) / l_new)
+    w_self = (jnp.exp(s_self - m_new) / l_new)
+    o = (o_paged.reshape(b, kvh, g, d).astype(jnp.float32) * w_hist[..., None]
+         + v_self.astype(jnp.float32)[:, :, None, :] * w_self[..., None])
+    return o.reshape(b, h, d).astype(o_paged.dtype)

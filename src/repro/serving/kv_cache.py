@@ -1,0 +1,217 @@
+"""Paged KV cache on the PiM arena — where PiDRAM's memory management
+meets serving.
+
+Pages (the DRAM-row analogue) are allocated from a
+:class:`SubarrayAllocator` over the KV arena; the PiDRAM-inherited
+properties:
+
+* **allocation constraints** — a sequence's pages prefer one slab
+  (subarray); copy-on-write forks allocate destination pages
+  `same_group_as` the source so the copy is a RowClone (`pim_page_copy`,
+  zero compute-unit traffic) rather than a gather through the core;
+* **init-on-free** — freed pages are zeroed with `pim_page_init`
+  (calloc analogue) so cross-request data leakage is structurally
+  impossible (the security-primitive angle of the paper);
+* **prefix sharing** — refcounted pages let concurrent requests share a
+  common prompt prefix; CoW forking copies only on divergence.
+
+The arena tensors are (layers, pages, page_size, kvh, hd); the decode
+step attends through `repro.kernels.paged_attention`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
+from repro.kernels.rowclone import ops as rc_ops
+
+
+@dataclass
+class Sequence:
+    seq_id: int
+    pages: List[int] = field(default_factory=list)
+    length: int = 0
+    shared_prefix_pages: int = 0
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, *, num_pages: int = 128,
+                 page_size: int = 16, num_slabs: int = 4,
+                 dtype=jnp.bfloat16, use_pallas: bool = False):
+        assert num_pages % num_slabs == 0
+        hd = cfg.resolved_head_dim
+        self.cfg = cfg
+        self.page_size = page_size
+        self.dtype = dtype
+        self.use_pallas = use_pallas
+        self.n_layers = _num_attn_layers(cfg)
+        kvh = cfg.num_kv_heads
+        self.k_arena = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
+        self.v_arena = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
+        self.allocator = SubarrayAllocator(
+            arena_groups(num_slabs, num_pages // num_slabs))
+        self.refcount: Dict[int, int] = {}
+        self.page_alloc: Dict[int, object] = {}
+        self.seqs: Dict[int, Sequence] = {}
+        self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0}
+
+    # ------------------------- page management ------------------------ #
+
+    def _alloc_page(self, near: Optional[int] = None) -> int:
+        kw = {}
+        if near is not None and near in self.page_alloc:
+            try:
+                a = self.allocator.alloc(1, group=self.page_alloc[near].group)
+            except PimAllocError:
+                a = self.allocator.alloc(1)
+        else:
+            a = self.allocator.alloc(1)
+        page = a.rows[0]
+        self.page_alloc[page] = a
+        self.refcount[page] = 1
+        return page
+
+    def _release_page(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            # pim_init on free: zero the page without reading it.
+            idx = jnp.asarray([page], jnp.int32)
+            for l in range(self.n_layers):
+                self.k_arena = self.k_arena.at[l].set(
+                    rc_ops.pim_page_init(
+                        self.k_arena[l].reshape(self.k_arena.shape[1], -1),
+                        idx, 0.0, use_pallas=self.use_pallas
+                    ).reshape(self.k_arena.shape[1:]))
+                self.v_arena = self.v_arena.at[l].set(
+                    rc_ops.pim_page_init(
+                        self.v_arena[l].reshape(self.v_arena.shape[1], -1),
+                        idx, 0.0, use_pallas=self.use_pallas
+                    ).reshape(self.v_arena.shape[1:]))
+            self.stats["pages_zeroed"] += 1
+            self.allocator.free(self.page_alloc.pop(page))
+            del self.refcount[page]
+
+    # ------------------------- sequence API ---------------------------- #
+
+    def create(self, seq_id: int, prompt_len: int,
+               share_with: Optional[int] = None,
+               shared_len: int = 0) -> Sequence:
+        seq = Sequence(seq_id)
+        if share_with is not None and shared_len:
+            src = self.seqs[share_with]
+            n_shared = shared_len // self.page_size
+            for p in src.pages[:n_shared]:
+                self.refcount[p] += 1
+                seq.pages.append(p)
+            seq.length = n_shared * self.page_size
+            seq.shared_prefix_pages = n_shared
+            self.stats["prefix_hits"] += 1
+        while seq.length < prompt_len:
+            seq.pages.append(self._alloc_page(
+                near=seq.pages[-1] if seq.pages else None))
+            seq.length = min(seq.length + self.page_size, prompt_len)
+        seq.length = prompt_len
+        self.seqs[seq_id] = seq
+        return seq
+
+    def fork(self, src_id: int, dst_id: int) -> Sequence:
+        """Beam/CoW fork: share full pages, RowClone-copy the partial tail."""
+        src = self.seqs[src_id]
+        dst = Sequence(dst_id)
+        full = src.length // self.page_size
+        for p in src.pages[:full]:
+            self.refcount[p] += 1
+            dst.pages.append(p)
+        if full < len(src.pages):  # partial tail page -> CoW copy now
+            tail = src.pages[full]
+            new = self._alloc_page(near=tail)
+            self._copy_page(tail, new)
+            dst.pages.append(new)
+            self.stats["cow_copies"] += 1
+        dst.length = src.length
+        dst.shared_prefix_pages = full
+        self.seqs[dst_id] = dst
+        return dst
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        s = jnp.asarray([src], jnp.int32)
+        d = jnp.asarray([dst], jnp.int32)
+        for l in range(self.n_layers):
+            self.k_arena = self.k_arena.at[l].set(
+                rc_ops.pim_page_copy(
+                    self.k_arena[l].reshape(self.k_arena.shape[1], -1), s, d,
+                    use_pallas=self.use_pallas).reshape(self.k_arena.shape[1:]))
+            self.v_arena = self.v_arena.at[l].set(
+                rc_ops.pim_page_copy(
+                    self.v_arena[l].reshape(self.v_arena.shape[1], -1), s, d,
+                    use_pallas=self.use_pallas).reshape(self.v_arena.shape[1:]))
+
+    def ensure_writable_tail(self, seq: Sequence) -> None:
+        """Before appending: CoW if the tail page is shared; allocate a
+        fresh page on page-boundary crossings."""
+        if seq.length % self.page_size == 0:
+            seq.pages.append(self._alloc_page(
+                near=seq.pages[-1] if seq.pages else None))
+            return
+        tail = seq.pages[-1]
+        if self.refcount[tail] > 1:
+            new = self._alloc_page(near=tail)
+            self._copy_page(tail, new)
+            self.refcount[tail] -= 1
+            seq.pages[-1] = new
+            self.refcount[new] = 1
+            self.stats["cow_copies"] += 1
+
+    def append_token_kv(self, seq: Sequence, k: jax.Array, v: jax.Array) -> None:
+        """k, v: (layers, kvh, hd) for the token at seq.length."""
+        self.ensure_writable_tail(seq)
+        page = seq.pages[-1]
+        slot = seq.length % self.page_size
+        self.k_arena = self.k_arena.at[:, page, slot].set(k.astype(self.dtype))
+        self.v_arena = self.v_arena.at[:, page, slot].set(v.astype(self.dtype))
+        seq.length += 1
+
+    def write_prompt_kv(self, seq: Sequence, k: jax.Array, v: jax.Array,
+                        start: int = 0) -> None:
+        """k, v: (layers, n, kvh, hd) — bulk write prefilled KV."""
+        n = k.shape[1]
+        for i in range(n):
+            page = seq.pages[(start + i) // self.page_size]
+            slot = (start + i) % self.page_size
+            self.k_arena = self.k_arena.at[:, page, slot].set(
+                k[:, i].astype(self.dtype))
+            self.v_arena = self.v_arena.at[:, page, slot].set(
+                v[:, i].astype(self.dtype))
+
+    def free(self, seq_id: int) -> None:
+        seq = self.seqs.pop(seq_id)
+        for p in seq.pages:
+            self._release_page(p)
+
+    def block_table(self, seq_ids: List[int], max_pages: int) -> Tuple[jax.Array, jax.Array]:
+        bt = np.zeros((len(seq_ids), max_pages), np.int32)
+        lens = np.zeros((len(seq_ids),), np.int32)
+        for i, sid in enumerate(seq_ids):
+            seq = self.seqs[sid]
+            bt[i, :len(seq.pages)] = seq.pages
+            lens[i] = seq.length
+        return jnp.asarray(bt), jnp.asarray(lens)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self.refcount)
+
+
+def _num_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.dec_layers
+    return cfg.num_layers

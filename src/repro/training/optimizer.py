@@ -1,0 +1,137 @@
+"""Optimizers (AdamW, Adafactor) implemented natively on pytrees.
+
+State dtype is configurable (`opt_state_dtype`): fp32 by default; bf16
+halves optimizer memory for the 236B/398B dry-run configs (quality note
+recorded in DESIGN.md — bf16 moments with fp32 master params is the
+standard large-scale compromise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def lr_schedule(ocfg: OptimizerConfig) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup + cosine decay to 10%."""
+
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = ocfg.lr * step / max(ocfg.warmup_steps, 1)
+        frac = jnp.clip((step - ocfg.warmup_steps)
+                        / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+        cos = ocfg.lr * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < ocfg.warmup_steps, warm, cos)
+
+    return fn
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ------------------------------ AdamW ---------------------------------- #
+
+
+def adamw_init(params: Any, state_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+def adamw_update(params: Any, grads: Any, opt: Dict[str, Any],
+                 ocfg: OptimizerConfig, state_dtype=jnp.float32):
+    step = opt["step"] + 1
+    lr = lr_schedule(ocfg)(step)
+    b1, b2, eps, wd = ocfg.b1, ocfg.b2, ocfg.eps, ocfg.weight_decay
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps) + wd * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                m32.astype(state_dtype), v32.astype(state_dtype))
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------- Adafactor -------------------------------- #
+
+
+def adafactor_init(params: Any) -> Dict[str, Any]:
+    """Factored second moments for >=2D params; full for 1D."""
+
+    def mk(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"fac": jax.tree.map(mk, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params: Any, grads: Any, opt: Dict[str, Any],
+                     ocfg: OptimizerConfig):
+    step = opt["step"] + 1
+    lr = lr_schedule(ocfg)(step)
+    beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if p.ndim >= 2:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rms = (vr[..., None] * vc[..., None, :]) / (
+                jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps)
+            update = g32 / (jnp.sqrt(rms) + 1e-8)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            update = g32 / (jnp.sqrt(v) + 1e-8)
+            new_s = {"v": v}
+        # update clipping (Adafactor d=1.0)
+        denom = jnp.maximum(1.0, jnp.sqrt(jnp.mean(update * update)))
+        newp = (p.astype(jnp.float32) - lr * update / denom
+                - lr * ocfg.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return (newp, new_s)
+
+    is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, params, grads, opt["fac"],
+                       is_leaf=lambda x: isinstance(x, jax.Array))
+    # out is a tree of (param, state) tuples at param positions
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_fac = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"fac": new_fac, "step": step}
+
+
+def make_optimizer(ocfg: OptimizerConfig, state_dtype=jnp.float32):
+    if ocfg.name == "adamw":
+        return (lambda p: adamw_init(p, state_dtype),
+                lambda p, g, o: adamw_update(p, g, o, ocfg, state_dtype))
+    if ocfg.name == "adafactor":
+        return adafactor_init, lambda p, g, o: adafactor_update(p, g, o, ocfg)
+    raise ValueError(ocfg.name)

@@ -1,0 +1,128 @@
+"""Loss + train step factory (microbatching, remat, clipping, optimizer).
+
+The returned ``train_step(state, batch)`` is pure and jit-able; sharding
+comes from in/out shardings supplied by the launcher (params by
+`param_specs`, batch by the batch spec, state follows params).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig, ParallelConfig
+from repro.models import transformer as T
+from .optimizer import clip_by_global_norm, make_optimizer
+
+IGNORE = -100
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean xent over non-ignored labels; returns (loss, token_count)."""
+    mask = (labels != IGNORE)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    count = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / count, count
+
+
+def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig):
+    from repro.models.lm_head import fused_xent
+
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        # memory-efficient path: features + chunked fused softmax-xent
+        # (fp32 logits never materialized for the full sequence).
+        feats, aux = T.forward(cfg, pcfg, params, batch, mode="features")
+        labels = batch["labels"]
+        table = params["embed"].get("out", params["embed"]["tok"])
+        nll, count = fused_xent(feats, table, labels)
+        loss = nll / jnp.maximum(count, 1)
+        total = loss + AUX_WEIGHT * aux
+        return total, {"loss": loss, "aux": aux,
+                       "tokens": count.astype(jnp.float32)}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, ocfg: OptimizerConfig,
+                    state_dtype=jnp.float32):
+    loss_fn = make_loss_fn(cfg, pcfg)
+    opt_init, opt_update = make_optimizer(ocfg, state_dtype)
+
+    def init_state(params):
+        return {"params": params, "opt": opt_init(params)}
+
+    def grads_of(params, batch):
+        if pcfg.microbatches > 1:
+            mb = pcfg.microbatches
+            b = batch["tokens"].shape[0]
+            assert b % mb == 0, (b, mb)
+            split = lambda x: x.reshape(mb, b // mb, *x.shape[1:])
+            mbatch = {k: split(v) for k, v in batch.items()}
+
+            def acc_fn(carry, mb_batch):
+                g_acc, m_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / mb, g_acc, g)
+                m_acc = jax.tree.map(lambda a, x: a + x / mb, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32),
+                  "tokens": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_fn, (g0, m0), mbatch)
+            return grads, metrics
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(state, batch):
+        grads, metrics = grads_of(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+        new_params, new_opt = opt_update(state["params"], grads, state["opt"])
+        metrics = dict(metrics, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return init_state, train_step
+
+
+def make_eval_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    loss_fn = make_loss_fn(cfg, pcfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+# ----------------------- serve steps (dry-run units) -------------------- #
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    def prefill_step(params, batch, cache, lengths):
+        logits, new_cache, _ = T.forward(cfg, pcfg, params, batch,
+                                         mode="prefill", cache=cache,
+                                         lengths=lengths)
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    def decode_step(params, batch, cache, write_pos, lengths):
+        logits, new_cache = T.forward(cfg, pcfg, params, batch, mode="decode",
+                                      cache=cache, write_pos=write_pos,
+                                      lengths=lengths)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,176 @@
+"""Distribution layer: sharding-rule resolution, gradient compression
+(multi-device via subprocess), pimolib TPU arena, data pipeline."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_local_mesh
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class TestShardingRules:
+    def test_divisibility_fallback(self):
+        mesh = make_local_mesh(1, 1)
+        with sh.sharding_env(mesh):
+            # axis size 1 -> everything replicated (no constraint effect)
+            spec = sh.resolve_spec((8, 16), ("batch", "ff"))
+            assert tuple(spec) == (None, None)
+
+    def test_resolve_spec_with_fake_mesh(self):
+        # abstract mesh via AbstractMesh is overkill; emulate by checking
+        # the rule logic with a 1-device mesh and the rule table itself
+        rules = sh.default_rules(multi_pod=True)
+        assert rules["batch"] == ("pod", "data")
+        assert rules["experts"] == ("model",)
+
+    def test_shard_noop_without_mesh(self):
+        x = jnp.ones((4, 4))
+        assert sh.shard(x, "batch", None) is x
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bound(self, rng):
+        from repro.distributed.compression import _quantize, _dequantize
+        x = jnp.asarray(rng.normal(size=(3, 1000)).astype(np.float32)) * 5
+        codes, scale = _quantize(x)
+        back = _dequantize(codes, scale, 1000)
+        err = np.abs(np.asarray(back - x))
+        bound = np.asarray(scale).max() * 0.5 + 1e-6
+        assert err.max() <= bound
+
+    @settings(max_examples=5, deadline=None)
+    @given(n=st.integers(10, 3000))
+    def test_quantize_shapes(self, n):
+        from repro.distributed.compression import _quantize, _dequantize
+        x = jnp.linspace(-1, 1, n)[None]
+        codes, scale = _quantize(x)
+        assert _dequantize(codes, scale, n).shape == (1, n)
+
+    @pytest.mark.slow
+    def test_compressed_psum_close_to_exact_8dev(self):
+        """Run in a subprocess with 8 host devices."""
+        prog = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.compression import psum_compressed
+            mesh = jax.make_mesh((8,), ("data",))
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.normal(size=(8, 257)).astype(np.float32))
+            exact = shard_map(lambda v: jax.lax.psum(v, "data"), mesh=mesh,
+                              in_specs=P("data"), out_specs=P(None),
+                              check_rep=False)(x)
+            comp = shard_map(lambda v: psum_compressed(v[0], "data")[None],
+                             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                             check_rep=False)(x)
+            err = np.abs(np.asarray(comp[0] - exact[0]))
+            rel = err.max() / (np.abs(np.asarray(exact[0])).max() + 1e-9)
+            assert rel < 0.02, rel
+            print("OK", rel)
+        """)
+        env = dict(os.environ, PYTHONPATH=SRC)
+        env.pop("JAX_PLATFORMS", None)
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "OK" in out.stdout
+
+
+class TestTpuPimolib:
+    def test_arena_copy_init_rand(self):
+        from repro.core import make_tpu_arena, TpuLib, Blocking
+        arena = make_tpu_arena(num_slabs=2, pages_per_slab=8, page_elems=64,
+                               dtype=jnp.float32)
+        lib = TpuLib(arena)
+        src, dst = arena.allocator.alloc_copy_pair(2)
+        vals = jnp.arange(2 * 64, dtype=jnp.float32).reshape(2, 64)
+        lib.write_pages(src, vals)
+        lib.copy_pages(src, dst, blocking=Blocking.FIN)
+        np.testing.assert_array_equal(np.asarray(lib.read_pages(dst)), vals)
+        lib.init_pages(dst, 0.0, blocking=Blocking.FIN)
+        assert float(jnp.abs(lib.read_pages(dst)).sum()) == 0.0
+        r = lib.rand(jnp.asarray([1, 2], jnp.uint32), 4, 16)
+        assert r.shape == (4, 16) and r.dtype == jnp.uint32
+
+    def test_same_slab_constraint_enforced(self):
+        from repro.core import make_tpu_arena, TpuLib
+        from repro.core.allocator import PimAllocError
+        arena = make_tpu_arena(num_slabs=2, pages_per_slab=4, page_elems=16)
+        lib = TpuLib(arena)
+        a = arena.allocator.alloc(1, group=0)
+        b = arena.allocator.alloc(1, group=1)
+        with pytest.raises(ValueError):
+            lib.copy_pages(a, b)
+
+
+class TestDataPipeline:
+    def test_deterministic_replay(self):
+        from repro.configs import ARCHS, ShapeConfig, reduced
+        from repro.data.pipeline import PipelineConfig, SyntheticLM
+        r = reduced(ARCHS["gemma-2b"])
+        d1 = SyntheticLM(r, ShapeConfig("t", 64, 4, "train"), PipelineConfig(seed=9))
+        d2 = SyntheticLM(r, ShapeConfig("t", 64, 4, "train"), PipelineConfig(seed=9))
+        b1, b2 = d1.batch(17), d2.batch(17)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_prefetcher(self):
+        from repro.data.pipeline import Prefetcher
+        it = Prefetcher(iter(range(10)), depth=3)
+        assert list(it) == list(range(10))
+
+    def test_labels_shifted(self):
+        from repro.configs import ARCHS, ShapeConfig, reduced
+        from repro.data.pipeline import PipelineConfig, SyntheticLM
+        r = reduced(ARCHS["granite-3-8b"])
+        d = SyntheticLM(r, ShapeConfig("t", 32, 2, "train"), PipelineConfig())
+        b = d.batch(0)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+class TestAllocatorProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(ops=st.lists(st.tuples(st.booleans(), st.integers(1, 4)),
+                        min_size=1, max_size=30))
+    def test_never_double_allocates(self, ops):
+        from repro.core.allocator import (PimAllocError, SubarrayAllocator,
+                                          arena_groups)
+        alloc = SubarrayAllocator(arena_groups(2, 16))
+        live = []
+        seen = set()
+        for is_alloc, n in ops:
+            if is_alloc or not live:
+                try:
+                    a = alloc.alloc(n)
+                except PimAllocError:
+                    continue
+                for r in a.rows:
+                    assert r not in seen
+                    seen.add(r)
+                live.append(a)
+            else:
+                a = live.pop()
+                for r in a.rows:
+                    seen.discard(r)
+                alloc.free(a)
+        assert alloc.free_rows() == 32 - len(seen)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 8))
+    def test_copy_pair_same_group(self, n):
+        from repro.core.allocator import SubarrayAllocator, arena_groups
+        alloc = SubarrayAllocator(arena_groups(4, 16))
+        src, dst = alloc.alloc_copy_pair(n)
+        assert src.group == dst.group
+        assert not set(src.rows) & set(dst.rows)

@@ -1,0 +1,138 @@
+"""Serving: paged engine vs dense decode, CoW forking, prefix sharing,
+page lifecycle security (pim_init on free), allocator integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ParallelConfig, reduced
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import PagedEngine, Request
+from repro.serving.kv_cache import PagedKVCache
+
+PCFG = ParallelConfig(attention_impl="naive", remat="none")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def greedy_dense(cfg, params, prompt, new):
+    toks = jnp.asarray(prompt)[None]
+    n = len(prompt)
+    cache = T.init_cache(cfg, 1, n + new + 1)
+    lg, cache, _ = T.forward(cfg, PCFG, params, {"tokens": toks},
+                             mode="prefill", cache=cache,
+                             lengths=jnp.asarray([n], jnp.int32))
+    out = [int(jnp.argmax(lg[0, 0]))]
+    for t in range(new - 1):
+        pos = n + t
+        lg, cache = T.forward(cfg, PCFG, params,
+                              {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+                              mode="decode", cache=cache,
+                              write_pos=jnp.asarray(pos),
+                              lengths=jnp.asarray([pos + 1], jnp.int32))
+        out.append(int(jnp.argmax(lg[0, 0])))
+    return out
+
+
+class TestPagedEngine:
+    def test_matches_dense_greedy(self, model, rng):
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+        ref = greedy_dense(cfg, params, prompt, 5)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        eng.submit(Request(0, prompt, max_new_tokens=5, temperature=0.0))
+        assert eng.run()[0] == ref
+
+    def test_batched_requests_isolated(self, model, rng):
+        cfg, params = model
+        p1 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+        p2 = rng.integers(0, cfg.vocab_size, 14).astype(np.int32)
+        ref1 = greedy_dense(cfg, params, p1, 4)
+        ref2 = greedy_dense(cfg, params, p2, 4)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        eng.submit(Request(0, p1, max_new_tokens=4, temperature=0.0))
+        eng.submit(Request(1, p2, max_new_tokens=4, temperature=0.0))
+        res = eng.run()
+        assert res[0] == ref1 and res[1] == ref2
+
+    def test_prefix_sharing_and_page_accounting(self, model, rng):
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        eng.submit(Request(0, prompt, max_new_tokens=3, temperature=0.0))
+        eng.submit(Request(1, prompt, max_new_tokens=3, temperature=0.0,
+                           share_with=0, shared_len=12))
+        res = eng.run()
+        assert res[0] == res[1]
+        assert eng.cache.stats["prefix_hits"] == 1
+        assert eng.cache.pages_in_use == 0  # everything freed
+
+    def test_pages_zeroed_on_free(self, model, rng):
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=16)
+        eng.submit(Request(0, prompt, max_new_tokens=2, temperature=0.0))
+        eng.run()
+        assert eng.cache.stats["pages_zeroed"] > 0
+        # the arena holds no residual data (security property)
+        assert float(jnp.abs(eng.cache.k_arena).sum()) == 0.0
+        assert float(jnp.abs(eng.cache.v_arena).sum()) == 0.0
+
+
+class TestKVCacheUnit:
+    def test_fork_cow_semantics(self, model):
+        cfg, _ = model
+        cache = PagedKVCache(cfg, num_pages=32, page_size=4)
+        seq = cache.create(0, 10)  # 3 pages (2 full + 1 partial)
+        k = jnp.ones((cache.n_layers, cfg.num_kv_heads, cfg.resolved_head_dim))
+        forked = cache.fork(0, 1)
+        assert cache.stats["cow_copies"] == 1     # partial tail copied
+        assert forked.pages[:2] == cache.seqs[0].pages[:2]  # shared
+        assert forked.pages[2] != cache.seqs[0].pages[2]    # CoW'd
+        # appending to the original does not affect the fork
+        cache.append_token_kv(cache.seqs[0], k, k)
+        assert cache.seqs[1].length == 10
+
+    def test_same_slab_preference(self, model):
+        cfg, _ = model
+        cache = PagedKVCache(cfg, num_pages=32, page_size=4, num_slabs=4)
+        seq = cache.create(0, 16)
+        groups = {cache.page_alloc[p].group for p in seq.pages}
+        assert len(groups) == 1  # RowClone-constraint honoured
+
+    def test_out_of_pages_raises(self, model):
+        from repro.core.allocator import PimAllocError
+        cfg, _ = model
+        cache = PagedKVCache(cfg, num_pages=8, page_size=4)
+        cache.create(0, 8 * 4)
+        with pytest.raises(PimAllocError):
+            cache.create(1, 8)
+
+
+class TestSampling:
+    def test_temperature_zero_deterministic(self, model, rng):
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        outs = []
+        for _ in range(2):
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=32)
+            eng.submit(Request(0, prompt, max_new_tokens=4, temperature=0.0))
+            outs.append(tuple(eng.run()[0]))
+        assert outs[0] == outs[1]
+
+    def test_sampled_tokens_vary_with_seed(self, model, rng):
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        outs = set()
+        for seed in range(3):
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=32, seed=seed)
+            eng.submit(Request(0, prompt, max_new_tokens=6, temperature=2.0))
+            outs.add(tuple(eng.run()[0]))
+        assert len(outs) > 1

@@ -1,0 +1,148 @@
+"""End-to-end behaviour of the PiDRAM core: paper-number reproduction,
+subarray discovery, allocator constraints, POC protocol, RowClone and
+D-RaNGe case studies on the simulated prototype."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Blocking, CoherencePolicy, DeviceLib, DRAMGeometry,
+                        DRangeTRNG, EndToEndCosts, Instruction,
+                        MemoryController, Opcode, PimOpsController,
+                        SimulatedDRAM, allocator_from_subarray_map,
+                        characterize, discover_subarrays)
+
+PAPER = {
+    "copy_no_coherence": 118.5,
+    "init_no_coherence": 88.7,
+    "copy_coherence": 14.6,
+    "init_coherence": 12.6,
+}
+
+
+@pytest.fixture(scope="module")
+def proto():
+    dev = SimulatedDRAM(DRAMGeometry(num_subarrays=8, rows_per_subarray=32))
+    mc = MemoryController(dev)
+    return dev, mc
+
+
+class TestPaperNumbers:
+    def test_rowclone_speedups_match_paper(self, proto):
+        _, mc = proto
+        sp = EndToEndCosts(mc).speedups()
+        for k, target in PAPER.items():
+            assert abs(sp[k] - target) / target < 0.10, (k, sp[k], target)
+
+    def test_drange_latency_throughput_match_paper(self, proto):
+        _, mc = proto
+        costs = EndToEndCosts(mc)
+        assert abs(costs.drange_latency_ns() - 220.0) / 220.0 < 0.10
+        assert abs(costs.drange_throughput_mbps() - 8.30) / 8.30 < 0.10
+
+    def test_rowclone_sequence_violates_timings(self, proto):
+        _, mc = proto
+        res = mc.run_sequence("rowclone_copy", 0, 0)
+        gaps = [c.at_ns for c in res.commands]
+        # ACT->PRE and PRE->ACT gaps are far below tRAS/tRP
+        assert gaps[1] - gaps[0] < mc.t.tRAS / 4
+        assert gaps[2] - gaps[1] < mc.t.tRP / 4
+
+
+class TestSubarrayDiscovery:
+    def test_discovered_groups_match_hidden_map(self, proto):
+        dev, mc = proto
+        smap = discover_subarrays(mc, max_rows=64)
+        # groups are internally consistent with the device's hidden map
+        for g, rows in smap.members.items():
+            true = {dev._true_subarray_of(r) for r in rows}
+            assert len(true) == 1, f"group {g} spans subarrays {true}"
+
+    def test_rowclone_fails_across_subarrays(self, proto):
+        dev, mc = proto
+        smap = discover_subarrays(mc, max_rows=32)
+        g0 = smap.members[0][0]
+        other = next(r for r in range(32) if not smap.same_subarray(g0, r))
+        pattern = np.full(dev.geometry.row_bytes, 0xAB, np.uint8)
+        dev.write_row(g0, pattern)
+        dev.write_row(other, ~pattern)
+        res = mc.run_sequence("rowclone_copy", g0, other)
+        assert not res.ok
+        assert (dev.read_row(other) == ~pattern).all()  # unchanged
+
+
+class TestEndToEndWorkflow:
+    def test_copy_init_workflow(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        smap = discover_subarrays(mc, max_rows=32)
+        alloc = allocator_from_subarray_map(smap)
+        poc = PimOpsController(mc)
+        lib = DeviceLib(poc, alloc)
+        src, dst = alloc.alloc_copy_pair(2)
+        pat = np.random.default_rng(1).integers(
+            0, 256, dev.geometry.row_bytes, dtype=np.uint8)
+        dev.write_row(src.rows[0], pat)
+        rec = lib.copy(src, dst, blocking=Blocking.FIN)
+        assert rec.ok
+        assert (dev.read_row(dst.rows[0]) == pat).all()
+        rec = lib.init(dst)
+        assert rec.ok
+        assert (dev.read_row(dst.rows[0]) == 0).all()
+        # PiM path is far faster than the CPU path
+        cpu = lib.cpu_copy(src, dst)
+        assert cpu.latency_ns > 50 * rec.latency_ns
+
+    def test_coherence_costs_charged_when_dirty(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        smap = discover_subarrays(mc, max_rows=16)
+        alloc = allocator_from_subarray_map(smap)
+        lib = DeviceLib(PimOpsController(mc), alloc,
+                        coherence=CoherencePolicy.PRECISE)
+        src, dst = alloc.alloc_copy_pair(1)
+        clean = lib.copy(src, dst).latency_ns
+        alloc.touch_cpu_write(src)     # CPU dirtied the source
+        dirty = lib.copy(src, dst).latency_ns
+        assert dirty > clean + 1000    # CLFLUSH cost appears
+
+
+class TestPOCProtocol:
+    def test_isa_roundtrip(self):
+        insn = Instruction(Opcode.RC_COPY, 123, 456)
+        assert Instruction.decode(insn.encode()) == insn
+
+    def test_flag_handshake(self, proto):
+        _, mc = proto
+        poc = PimOpsController(mc)
+        poc.store_instruction(Instruction(Opcode.RC_COPY, 0, 0).encode())
+        poc.store_start()
+        flags = poc.load_flags()
+        assert flags.ack and flags.fin and not flags.start
+
+
+class TestDRaNGe:
+    def test_trng_end_to_end(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        poc = PimOpsController(mc)
+        cmap = characterize(mc, rows=list(range(16)), n_bits=1024, samples=80)
+        assert cmap.total_cells > 0
+        trng = DRangeTRNG(poc, cmap)
+        bits = trng.random_bits(1024)
+        assert bits.shape == (1024,)
+        frac = bits.mean()
+        assert 0.30 < frac < 0.70          # metastable cells near 0.5
+        from repro.core.drange import runs_count, serial_correlation
+        assert abs(serial_correlation(bits)) < 0.2
+        r = runs_count(bits)
+        assert 0.3 * len(bits) < r < 0.7 * len(bits)
+
+    def test_trng_streams_differ(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        poc = PimOpsController(mc)
+        cmap = characterize(mc, rows=list(range(16)), n_bits=1024, samples=80)
+        trng = DRangeTRNG(poc, cmap)
+        a = trng.random_bits(256)
+        b = trng.random_bits(256)
+        assert (a != b).any()

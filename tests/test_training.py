@@ -1,0 +1,141 @@
+"""Training substrate: optimizers, schedules, microbatching, loss descent,
+fused LM head."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, OptimizerConfig, ParallelConfig, reduced
+from repro.models import transformer as T
+from repro.models.lm_head import fused_xent, IGNORE
+from repro.models.params import init_params
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step, make_loss_fn
+
+
+class TestOptimizers:
+    def test_adamw_first_step_matches_reference(self):
+        ocfg = OptimizerConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                               weight_decay=0.0)
+        p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+        g = {"w": jnp.asarray([0.1, -0.2, 0.3])}
+        opt = O.adamw_init(p)
+        newp, newopt = O.adamw_update(p, g, opt, ocfg)
+        # step1: m_hat = g, v_hat = g^2 -> update = g/(|g|+eps) = sign(g)
+        lr1 = float(O.lr_schedule(ocfg)(jnp.asarray(1)))
+        np.testing.assert_allclose(
+            np.asarray(newp["w"]),
+            np.asarray(p["w"]) - lr1 * np.sign(np.asarray(g["w"])), rtol=1e-4)
+
+    def test_adamw_converges_quadratic(self):
+        ocfg = OptimizerConfig(lr=0.05, warmup_steps=5, total_steps=400,
+                               weight_decay=0.0)
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        opt = O.adamw_init(p)
+        for _ in range(400):
+            g = {"w": 2 * p["w"]}
+            p, opt = O.adamw_update(p, g, opt, ocfg)
+        assert float(jnp.abs(p["w"]).max()) < 0.05
+
+    def test_adafactor_converges_quadratic(self):
+        ocfg = OptimizerConfig(name="adafactor", lr=0.05, warmup_steps=5,
+                               total_steps=400, weight_decay=0.0)
+        p = {"w": jnp.ones((4, 3)) * 3.0}
+        opt = O.adafactor_init(p)
+        for _ in range(300):
+            g = {"w": 2 * p["w"]}
+            p, opt = O.adafactor_update(p, g, opt, ocfg)
+        assert float(jnp.abs(p["w"]).max()) < 0.1
+
+    def test_bf16_state_dtype(self):
+        p = {"w": jnp.ones((8,))}
+        opt = O.adamw_init(p, state_dtype=jnp.bfloat16)
+        assert opt["m"]["w"].dtype == jnp.bfloat16
+
+    @settings(max_examples=10, deadline=None)
+    @given(norm=st.floats(0.1, 100.0))
+    def test_clip_by_global_norm(self, norm):
+        g = {"a": jnp.ones((7,)) * norm}
+        clipped, gn = O.clip_by_global_norm(g, 1.0)
+        out_norm = float(O.global_norm(clipped))
+        assert out_norm <= 1.0 + 1e-4
+
+    def test_lr_schedule_shape(self):
+        ocfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        f = O.lr_schedule(ocfg)
+        assert float(f(jnp.asarray(0))) == 0.0
+        assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-5
+        assert float(f(jnp.asarray(100))) < 0.11
+
+
+class TestFusedHead:
+    @settings(max_examples=8, deadline=None)
+    @given(b=st.integers(1, 3), s=st.integers(3, 40), v=st.integers(7, 99),
+           chunk=st.sampled_from([4, 8, 512]))
+    def test_matches_naive(self, b, s, v, chunk):
+        rng = np.random.default_rng(s * 7 + v)
+        d = 8
+        x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+        W = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, v, (b, s)).astype(np.int32))
+        labels = labels.at[0, 0].set(IGNORE)
+
+        def naive(x, W):
+            logits = jnp.einsum("bsd,vd->bsv", x, W)
+            mask = labels != IGNORE
+            safe = jnp.where(mask, labels, 0)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+            return jnp.sum((logz - gold) * mask)
+
+        f = lambda x, W: fused_xent(x, W, labels, chunk)[0]
+        np.testing.assert_allclose(f(x, W), naive(x, W), rtol=2e-5)
+        gf = jax.grad(f, (0, 1))(x, W)
+        gn = jax.grad(naive, (0, 1))(x, W)
+        np.testing.assert_allclose(gf[0], gn[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gf[1], gn[1], rtol=1e-4, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_microbatching_equivalent(self, key):
+        r = reduced(ARCHS["stablelm-3b"])
+        params = init_params(T.model_defs(r), key)
+        batch = {"tokens": jax.random.randint(key, (4, 16), 0, r.vocab_size)}
+        batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+        o = OptimizerConfig(warmup_steps=1, total_steps=10)
+        outs = {}
+        for mb in (1, 2):
+            pcfg = ParallelConfig(remat="none", attention_impl="naive",
+                                  microbatches=mb)
+            init_state, step = make_train_step(r, pcfg, o)
+            st_, m = jax.jit(step)(init_state(params), batch)
+            outs[mb] = (st_, float(m["loss"]))
+        assert abs(outs[1][1] - outs[2][1]) < 1e-3
+        l1 = jax.tree.leaves(outs[1][0]["params"])
+        l2 = jax.tree.leaves(outs[2][0]["params"])
+        for a, b in zip(l1, l2):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_loss_decreases_on_learnable_stream(self, key):
+        from repro.configs import ShapeConfig
+        from repro.data.pipeline import PipelineConfig, SyntheticLM
+        r = reduced(ARCHS["stablelm-3b"], num_layers=2, d_model=64,
+                    d_ff=128, vocab_size=256)
+        shape = ShapeConfig("t", 64, 8, "train")
+        data = SyntheticLM(r, shape, PipelineConfig(seed=3))
+        pcfg = ParallelConfig(remat="none", attention_impl="chunked",
+                              attention_chunk=32)
+        init_state, step = make_train_step(
+            r, pcfg, OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+        state = init_state(init_params(T.model_defs(r), key))
+        jstep = jax.jit(step, donate_argnums=(0,))
+        losses = []
+        for i in range(60):
+            b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            state, m = jstep(state, b)
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5, losses[::10]
