@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,7 +84,8 @@ class MemoryController:
         self.open_row: Optional[int] = None
         self.trace: List[IssuedCmd] = []
         self._sequences: Dict[str, PimSequence] = {}
-        self.stats: Dict[str, float] = {"commands": 0, "pim_ops": 0}
+        self.stats: Dict[str, float] = {"commands": 0, "pim_ops": 0,
+                                        "pim_batches": 0}
 
         # Built-in PiM extensions (the paper's two case studies).
         self.register_sequence("rowclone_copy", _seq_rowclone_copy)
@@ -105,6 +106,33 @@ class MemoryController:
             raise KeyError(f"unknown PiM sequence {name!r}")
         self.stats["pim_ops"] += 1
         return self._sequences[name](self, a, b)
+
+    def run_sequence_batch(self, name: str,
+                           pairs: Sequence[Tuple[int, int]]) -> SequenceResult:
+        """Execute one registered sequence per operand pair back-to-back
+        as a single batched command sequence (ComputeDRAM-style batching:
+        the POC dispatch handshake is paid once for the whole batch; the
+        per-pair DRAM command timings still accrue individually).
+
+        Returns one combined :class:`SequenceResult` whose ``commands``
+        cover every pair, ``ok`` is the conjunction, and ``data`` the
+        concatenation of any per-pair payloads."""
+        if name not in self._sequences:
+            raise KeyError(f"unknown PiM sequence {name!r}")
+        t0 = self.now_ns
+        cmds_start = len(self.trace)
+        ok = True
+        datas = []
+        for a, b in pairs:
+            res = self._sequences[name](self, a, b)
+            ok &= res.ok
+            if res.data is not None:
+                datas.append(res.data)
+        self.stats["pim_ops"] += len(pairs)
+        self.stats["pim_batches"] += 1
+        data = np.concatenate(datas) if datas else None
+        return SequenceResult(self.now_ns - t0, self.trace[cmds_start:],
+                              ok=ok, data=data)
 
     # ------------------------------------------------------------------ #
     # Primitive command issue (advances the clock per DDR3 timing rules)
@@ -256,6 +284,37 @@ class EndToEndCosts:
             "init_no_coherence": self.cpu_init_ns() / self.rowclone_init_ns(False),
             "copy_coherence": self.cpu_copy_ns() / self.rowclone_copy_ns(True),
             "init_coherence": self.cpu_init_ns() / self.rowclone_init_ns(True),
+        }
+
+    # Batched dispatch (one POC handshake amortized over n row ops) ------ #
+
+    def rowclone_copy_batched_ns(self, n: int, coherent: bool = False) -> float:
+        """End-to-end cost of an n-row batched RowClone copy: one POC
+        handshake + n command sequences (+ per-row coherence flushes)."""
+        seq = _sequence_time_only(self.mc, "rowclone_copy")
+        total = self.mc.poc_handshake_ns() + n * seq
+        if coherent:
+            total += n * self.mc.clflush_ns(self.mc.proto.row_bytes)
+        return total
+
+    def rowclone_init_batched_ns(self, n: int, coherent: bool = False) -> float:
+        seq = _sequence_time_only(self.mc, "rowclone_copy")
+        total = self.mc.poc_handshake_ns() + n * seq
+        if coherent:
+            total += n * self.mc.clinval_ns(self.mc.proto.row_bytes)
+        return total
+
+    def batched_speedups(self, n: int) -> Dict[str, float]:
+        """Per-row speedups for an n-row batch vs the CPU moving the same
+        n rows.  At n=1 this matches :meth:`speedups`; as n grows the
+        handshake amortizes toward the pure command-sequence bound."""
+        cpu_copy = n * self.cpu_copy_ns()
+        cpu_init = n * self.cpu_init_ns()
+        return {
+            "copy_no_coherence": cpu_copy / self.rowclone_copy_batched_ns(n, False),
+            "init_no_coherence": cpu_init / self.rowclone_init_batched_ns(n, False),
+            "copy_coherence": cpu_copy / self.rowclone_copy_batched_ns(n, True),
+            "init_coherence": cpu_init / self.rowclone_init_batched_ns(n, True),
         }
 
     # D-RaNGe ----------------------------------------------------------- #

@@ -82,39 +82,58 @@ class DeviceLib:
 
     # -- the four-step pimolib protocol ---------------------------------- #
 
-    def _issue(self, insn: Instruction, blocking: Blocking) -> None:
-        self.poc.store_instruction(insn.encode())   # (i) write instruction reg
+    def _start_and_poll(self, blocking: Blocking) -> None:
         self.poc.store_start()                      # (ii) set Start flag
         flags = self.poc.load_flags()               # (iii) poll Ack / Fin
         want = flags.ack if blocking is Blocking.ACK else flags.fin
         assert want, "POC handshake failed"
 
+    def _issue(self, insn: Instruction, blocking: Blocking) -> None:
+        self.poc.store_instruction(insn.encode())   # (i) write instruction reg
+        self._start_and_poll(blocking)
+
+    def _dispatch(self, insns: list, blocking: Blocking,
+                  batch: bool) -> Tuple[bool, float]:
+        """Issue an instruction sequence; returns (ok, handshake_ns).
+
+        ``batch=True`` stages the whole sequence in the POC instruction
+        buffer and pays ONE register handshake; ``batch=False`` is the
+        legacy one-handshake-per-instruction dispatch (the looped
+        baseline the benchmarks compare against)."""
+        ok = True
+        if batch:
+            self.poc.store_instruction_buffer([i.encode() for i in insns])
+            self._start_and_poll(blocking)
+            return self.poc.last_ok, self.poc.mc.poc_handshake_ns()
+        for insn in insns:
+            self._issue(insn, blocking)
+            ok &= self.poc.last_ok
+        return ok, len(insns) * self.poc.mc.poc_handshake_ns()
+
     def copy(self, src: Allocation, dst: Allocation,
-             blocking: Blocking = Blocking.FIN) -> OpReceipt:
-        """RowClone-Copy src -> dst (row lists must be same-subarray)."""
+             blocking: Blocking = Blocking.FIN, batch: bool = True) -> OpReceipt:
+        """RowClone-Copy src -> dst (row lists must be same-subarray),
+        one POC handshake per batch by default."""
         if src.group != dst.group or src.nrows != dst.nrows:
             raise ValueError("copy operands must be same-subarray, same size")
         t0 = self.poc.mc.now_ns
         latency = self.coherence.flush_cost_ns(src, self.allocator, write_back=True)
-        ok = True
-        for s, d in zip(src.rows, dst.rows):
-            self._issue(Instruction(Opcode.RC_COPY, s, d), blocking)
-            latency += self.poc.mc.poc_handshake_ns()
-            ok &= self.poc.last_ok
-        latency += self.poc.mc.now_ns - t0
+        insns = [Instruction(Opcode.RC_COPY, s, d)
+                 for s, d in zip(src.rows, dst.rows)]
+        ok, handshakes = self._dispatch(insns, blocking, batch)
+        latency += handshakes + self.poc.mc.now_ns - t0
         return OpReceipt(ok, latency, "rowclone_copy")
 
-    def init(self, dst: Allocation, blocking: Blocking = Blocking.FIN) -> OpReceipt:
-        """RowClone-Init: copy the reserved zero row over each dst row."""
+    def init(self, dst: Allocation, blocking: Blocking = Blocking.FIN,
+             batch: bool = True) -> OpReceipt:
+        """RowClone-Init: copy the reserved zero row over each dst row
+        (one POC handshake per batch by default, as for :meth:`copy`)."""
         zero = self.reserve_zero_row(dst.group)
         t0 = self.poc.mc.now_ns
         latency = self.coherence.flush_cost_ns(dst, self.allocator, write_back=False)
-        ok = True
-        for d in dst.rows:
-            self._issue(Instruction(Opcode.RC_INIT, zero, d), blocking)
-            latency += self.poc.mc.poc_handshake_ns()
-            ok &= self.poc.last_ok
-        latency += self.poc.mc.now_ns - t0
+        insns = [Instruction(Opcode.RC_INIT, zero, d) for d in dst.rows]
+        ok, handshakes = self._dispatch(insns, blocking, batch)
+        latency += handshakes + self.poc.mc.now_ns - t0
         return OpReceipt(ok, latency, "rowclone_init")
 
     def rand_dram(self, n_bits: int, trng) -> Tuple[np.ndarray, OpReceipt]:

@@ -55,6 +55,12 @@ class PimOpsController:
         # D-RaNGe random-number buffer (hardware component in the paper's
         # D-RaNGe extension): the scheduler deposits generated bits here.
         self.rng_buffer: Deque[int] = collections.deque(maxlen=data_buffer_words * 64)
+        # Batched dispatch: pimolib can stage a whole instruction sequence
+        # and trigger it with ONE Start (one handshake for the batch) —
+        # the ComputeDRAM batched-command-sequence model.  None = no batch
+        # staged (an EMPTY staged batch is a valid no-op, distinct from
+        # falling back to the single instruction register).
+        self.insn_buffer: Optional[List[int]] = None
         self._last_result: Optional[SequenceResult] = None
 
     # -------------------- CPU-visible register interface ---------------- #
@@ -62,11 +68,20 @@ class PimOpsController:
     def store_instruction(self, word: int) -> None:
         self.instruction_reg = word
 
+    def store_instruction_buffer(self, words: List[int]) -> None:
+        """Stage a batch of instruction words; the next Start executes
+        them all under a single Ack/Fin handshake."""
+        self.insn_buffer = list(words)
+
     def store_start(self) -> None:
         """CPU sets Start; POC decodes + executes synchronously in the
-        model (the timing model accounts latency; see memctrl)."""
+        model (the timing model accounts latency; see memctrl).  If an
+        instruction batch is staged, the whole batch runs before Fin."""
         self.flags.start = True
-        self._execute()
+        if self.insn_buffer is not None:
+            self._execute_batch()
+        else:
+            self._execute()
 
     def load_flags(self) -> FlagRegister:
         return self.flags
@@ -108,6 +123,41 @@ class PimOpsController:
         self._last_result = res
         self.stats.executed[insn.opcode.name] += 1
         self.stats.busy_ns += self.mc.now_ns - t0
+        self.flags.fin = True
+
+    def _execute_batch(self) -> None:
+        """Run every staged instruction under one Ack/Fin pair.
+
+        Homogeneous RowClone batches route through the memory
+        controller's batched sequence (one scheduler entry); mixed
+        batches fall back to per-instruction decode.  ``last_ok`` is the
+        conjunction over the batch."""
+        words, self.insn_buffer = self.insn_buffer, None
+        insns = [Instruction.decode(w) for w in words]
+        self.flags.start = False
+        self.flags.ack = True
+        self.flags.fin = False
+
+        t0 = self.mc.now_ns
+        if not insns:
+            # empty batch: acknowledged no-op (do NOT fall back to the
+            # stale single-instruction register)
+            self._last_result = SequenceResult(0.0, [])
+        elif all(i.opcode in (Opcode.RC_COPY, Opcode.RC_INIT)
+                 for i in insns):
+            res = self.mc.run_sequence_batch(
+                "rowclone_copy", [(i.operand0, i.operand1) for i in insns])
+            for i in insns:
+                self.stats.executed[i.opcode.name] += 1
+            self._last_result = res
+            self.stats.busy_ns += self.mc.now_ns - t0
+        else:
+            ok = True
+            for insn in insns:
+                self.instruction_reg = insn.encode()
+                self._execute()          # accounts its own busy_ns
+                ok &= self.last_ok
+            self._last_result = SequenceResult(self.mc.now_ns - t0, [], ok=ok)
         self.flags.fin = True
 
     # -------------------- convenience ------------------------------------ #

@@ -56,3 +56,62 @@ def pim_page_init(arena: jax.Array, dst_pages: jax.Array, value,
     if not use_pallas:
         return ref.page_init(arena, dst_pages, value)
     return rowclone.page_init(arena, dst_pages, value, interpret=interpret)
+
+
+# ------------------------------------------------------------------ #
+# Layer-batched launches — the batched PiM op scheduler's primitives.
+# Arenas may carry arbitrary trailing dims: (L, P, ...) is flattened to
+# (L, P, E) for the kernel and restored on return.  An empty op batch is
+# a no-op (no launch at all; the scheduler never dispatches for it).
+# ------------------------------------------------------------------ #
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
+def pim_page_copy_batched(arena: jax.Array, src_pages: jax.Array,
+                          dst_pages: jax.Array, *, use_pallas: bool = False,
+                          interpret: bool = not _ON_TPU) -> jax.Array:
+    """Copy ``arena[:, src_pages] -> arena[:, dst_pages]`` across all
+    layers in one fused launch.  arena: (layers, pages, ...)."""
+    if src_pages.shape[0] == 0:
+        return arena
+    if not use_pallas:
+        return ref.page_copy_batched(arena, src_pages, dst_pages)
+    L, P = arena.shape[:2]
+    out = rowclone.page_copy_batched(arena.reshape(L, P, -1), src_pages,
+                                     dst_pages, interpret=interpret)
+    return out.reshape(arena.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
+def pim_page_init_batched(arena: jax.Array, dst_pages: jax.Array, value,
+                          *, use_pallas: bool = False,
+                          interpret: bool = not _ON_TPU) -> jax.Array:
+    if dst_pages.shape[0] == 0:
+        return arena
+    if not use_pallas:
+        return ref.page_init_batched(arena, dst_pages, value)
+    L, P = arena.shape[:2]
+    out = rowclone.page_init_batched(arena.reshape(L, P, -1), dst_pages,
+                                     value, interpret=interpret)
+    return out.reshape(arena.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
+def pim_kv_scatter(arena: jax.Array, pages: jax.Array, slots: jax.Array,
+                   new: jax.Array, *, use_pallas: bool = False,
+                   interpret: bool = not _ON_TPU) -> jax.Array:
+    """Write ``arena[:, pages[b], slots[b]] <- new[:, b]`` in one launch.
+
+    arena: (layers, pages, page_size, ...); new: (layers, batch, ...).
+    """
+    if pages.shape[0] == 0:
+        return arena
+    L, P, S = arena.shape[:3]
+    B = pages.shape[0]
+    a4 = arena.reshape(L, P, S, -1)
+    n3 = new.reshape(L, B, -1)
+    if not use_pallas:
+        out = ref.kv_scatter(a4, pages, slots, n3)
+    else:
+        out = rowclone.kv_scatter(a4, pages, slots, n3, interpret=interpret)
+    return out.reshape(arena.shape)

@@ -21,3 +21,24 @@ def page_copy(arena: jax.Array, src_pages: jax.Array, dst_pages: jax.Array) -> j
 def page_init(arena: jax.Array, dst_pages: jax.Array, value) -> jax.Array:
     page = jnp.full((dst_pages.shape[0], arena.shape[1]), value, arena.dtype)
     return arena.at[dst_pages].set(page)
+
+
+# Layer-batched variants: arena carries a leading (layers,) axis and every
+# layer moves in the one logical op.
+
+
+def page_copy_batched(arena: jax.Array, src_pages: jax.Array,
+                      dst_pages: jax.Array) -> jax.Array:
+    return arena.at[:, dst_pages].set(arena[:, src_pages])
+
+
+def page_init_batched(arena: jax.Array, dst_pages: jax.Array, value) -> jax.Array:
+    fill = jnp.full((arena.shape[0], dst_pages.shape[0]) + arena.shape[2:],
+                    value, arena.dtype)
+    return arena.at[:, dst_pages].set(fill)
+
+
+def kv_scatter(arena: jax.Array, pages: jax.Array, slots: jax.Array,
+               new: jax.Array) -> jax.Array:
+    """arena: (L, P, S, E); pages/slots: (B,); new: (L, B, E)."""
+    return arena.at[:, pages, slots].set(new.astype(arena.dtype))

@@ -6,7 +6,7 @@ HBM -> VMEM -> HBM pipeline.  Pallas double-buffers the grid automatically,
 so with row-sized blocks this runs at HBM bandwidth, the TPU equivalent of
 "copy at row-buffer speed instead of through the core".
 
-Three kernels:
+Kernel family:
 
 * ``copy``      — tile-streamed tensor copy.
 * ``init``      — tile memset from an SMEM scalar (no read traffic at all).
@@ -16,6 +16,18 @@ Three kernels:
   a PiDRAM instruction's row-address operands).  The arena is aliased
   in/out, so untouched pages are never moved: this is the RowClone
   "data never leaves the memory device" property at the XLA buffer level.
+
+Layer-batched variants (the batched PiM op scheduler's launch targets —
+one fused dispatch regardless of layer count or batch size, the TPU
+analogue of amortizing the POC handshake over a whole command batch):
+
+* ``page_copy_batched`` / ``page_init_batched`` — the same page ops over
+  a ``(layers, pages, elems)`` arena with a 3D grid: every layer's pages
+  move in one launch instead of ``O(layers)`` separate calls.
+* ``kv_scatter`` — write ``(layers, batch)`` fresh KV slots
+  ``arena[l, pages[b], slots[b]] <- new[l, b]`` in one launch; the
+  (page, slot) coordinates are scalar-prefetched so the output BlockSpec
+  lands each block exactly on its slot (no read-modify-write).
 
 Block shapes are chosen so a block is a multiple of the (8, 128) f32 /
 (16, 128) bf16 VMEM tile and comfortably fits VMEM with double buffering.
@@ -116,6 +128,121 @@ def page_copy(arena: jax.Array, src_pages: jax.Array, dst_pages: jax.Array,
         input_output_aliases={2: 0},  # arena (after 2 scalar-prefetch args) -> out
         interpret=interpret,
     )(src_pages.astype(jnp.int32), dst_pages.astype(jnp.int32), arena)
+
+
+def _page_copy_batched_kernel(src_idx_ref, dst_idx_ref, arena_ref, out_ref):
+    # Grid: (layers, num_copies, col_blocks); index_maps route
+    # arena[l, src_idx[i]] -> arena[l, dst_idx[i]].
+    del src_idx_ref, dst_idx_ref
+    out_ref[...] = arena_ref[...]
+
+
+def page_copy_batched(arena: jax.Array, src_pages: jax.Array,
+                      dst_pages: jax.Array, *, block_cols: int = 4096,
+                      interpret: bool = False) -> jax.Array:
+    """Copy ``arena[:, src_pages[i]] -> arena[:, dst_pages[i]]`` for all i
+    across every layer in ONE launch.
+
+    arena: (layers, num_pages, page_elems); src/dst_pages: (n,) int32.
+    The arena is aliased in/out, so the launch cost is independent of the
+    number of layers (grid iterations stream, nothing re-dispatches).
+    """
+    layers, num_pages, page_elems = arena.shape
+    n = src_pages.shape[0]
+    bc = min(block_cols, page_elems)
+    grid = (layers, n, pl.cdiv(page_elems, bc))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bc),
+                         lambda l, i, j, src_idx, dst_idx: (l, src_idx[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bc),
+                               lambda l, i, j, src_idx, dst_idx: (l, dst_idx[i], j)),
+    )
+    return pl.pallas_call(
+        _page_copy_batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(src_pages.astype(jnp.int32), dst_pages.astype(jnp.int32), arena)
+
+
+def _page_init_batched_kernel(dst_idx_ref, val_ref, arena_ref, out_ref):
+    del dst_idx_ref, arena_ref
+    out_ref[...] = jnp.full(out_ref.shape, val_ref[0], out_ref.dtype)
+
+
+def page_init_batched(arena: jax.Array, dst_pages: jax.Array, value,
+                      *, block_cols: int = 4096,
+                      interpret: bool = False) -> jax.Array:
+    """Memset ``arena[:, dst_pages[i]] <- value`` across all layers in one
+    launch (layer-batched RowClone-Init)."""
+    layers, num_pages, page_elems = arena.shape
+    n = dst_pages.shape[0]
+    bc = min(block_cols, page_elems)
+    grid = (layers, n, pl.cdiv(page_elems, bc))
+    val = jnp.asarray([value], arena.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # value
+            pl.BlockSpec(memory_space=pl.ANY),       # arena (aliased, unread)
+        ],
+        out_specs=pl.BlockSpec((1, 1, bc),
+                               lambda l, i, j, dst_idx: (l, dst_idx[i], j)),
+    )
+    return pl.pallas_call(
+        _page_init_batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(dst_pages.astype(jnp.int32), val, arena)
+
+
+def _kv_scatter_kernel(page_idx_ref, slot_idx_ref, new_ref, arena_ref, out_ref):
+    # Grid: (layers, batch).  The output BlockSpec lands this (1,1,1,E)
+    # block exactly on arena[l, pages[b], slots[b]], so the body is a pure
+    # slot write — no surrounding-page read traffic.
+    del page_idx_ref, slot_idx_ref, arena_ref
+    out_ref[...] = new_ref[...].reshape(out_ref.shape)
+
+
+def kv_scatter(arena: jax.Array, pages: jax.Array, slots: jax.Array,
+               new: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Scatter fresh KV vectors: ``arena[l, pages[b], slots[b]] <- new[l, b]``.
+
+    arena: (layers, num_pages, page_size, elems); pages/slots: (batch,)
+    int32; new: (layers, batch, elems).  One launch writes every layer's
+    slot for every sequence in the batch — the decode-round KV write is a
+    single dispatch independent of ``layers`` and ``batch``.  Duplicate
+    (page, slot) pairs are undefined (last grid iteration wins).
+    """
+    layers, num_pages, page_size, elems = arena.shape
+    batch = pages.shape[0]
+    grid = (layers, batch)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, elems), lambda l, b, pg, sl: (l, b, 0)),  # new
+            pl.BlockSpec(memory_space=pl.ANY),       # arena (aliased, unread)
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, elems),
+                               lambda l, b, pg, sl: (l, pg[b], sl[b], 0)),
+    )
+    return pl.pallas_call(
+        _kv_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(pages.astype(jnp.int32), slots.astype(jnp.int32),
+      new.astype(arena.dtype), arena)
 
 
 def _page_init_kernel(dst_idx_ref, val_ref, arena_ref, out_ref):

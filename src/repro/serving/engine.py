@@ -9,6 +9,12 @@ The engine runs the *paged* attention path: per-layer KV lives only in
 the arena; the model's dense-cache path is never materialized.  Forking
 (`n>1` samples sharing a prompt) uses the cache's RowClone CoW.
 Sampling consumes the D-RaNGe TPU generator (`pim_rand`).
+
+Arena mutations go through the cache's batched PiM op scheduler: a
+decode round issues one flush for the round's CoW copies (before
+attention reads the arena) and one for the round's KV scatter — a
+constant number of kernel launches per round, independent of
+``num_layers`` and the active-batch size.
 """
 
 from __future__ import annotations
@@ -119,9 +125,12 @@ class PagedEngine:
         rids = sorted(self.active)
         last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
                            jnp.int32)
-        # reserve the slot for the incoming token on every sequence
+        # reserve the slot for the incoming token on every sequence; the
+        # CoW copies all land in ONE batched launch before attention reads
+        # the arena (constant dispatch count, however many sequences fork)
         for r in rids:
             self.cache.ensure_writable_tail(self.cache.seqs[r])
+        self.cache.flush_pending()
         max_pages = max(len(self.cache.seqs[r].pages) for r in rids)
         bt, lens = self.cache.block_table(rids, max_pages)
 
@@ -129,16 +138,9 @@ class PagedEngine:
             cfg, self.pcfg, p, last, self.cache.k_arena, self.cache.v_arena,
             bt, lens, use_pallas=self.use_pallas)
 
-        # write the new kv at slot `length` (page already reserved)
-        for i, r in enumerate(rids):
-            seq = self.cache.seqs[r]
-            page = seq.pages[-1]
-            slot = seq.length % self.cache.page_size
-            self.cache.k_arena = self.cache.k_arena.at[:, page, slot].set(
-                k_new[:, i, 0].astype(self.cache.dtype))
-            self.cache.v_arena = self.cache.v_arena.at[:, page, slot].set(
-                v_new[:, i, 0].astype(self.cache.dtype))
-            seq.length += 1
+        # scatter the whole round's new KV (all layers, all sequences) in
+        # one coalesced launch per arena
+        self.cache.write_token_kv_batch(rids, k_new[:, :, 0], v_new[:, :, 0])
         sampled = self._sample(logits[:, 0], 1.0)
         greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i, r in enumerate(rids):

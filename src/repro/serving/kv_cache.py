@@ -17,6 +17,15 @@ properties:
 
 The arena tensors are (layers, pages, page_size, kvh, hd); the decode
 step attends through `repro.kernels.paged_attention`.
+
+All arena mutations route through the batched PiM op scheduler
+(:class:`repro.serving.pim_queue.PimOpQueue`): ops are enqueued as
+lightweight records and flushed as one coalesced launch per op kind, so
+a CoW fork, a sequence free, or a bulk prompt write costs a constant
+number of kernel dispatches regardless of ``num_layers`` or batch size.
+Batched copies read all sources from the pre-flush arena state (each
+RowClone in a batch is independent); destination pages are always
+freshly allocated, so no chaining can occur within a flush.
 """
 
 from __future__ import annotations
@@ -30,7 +39,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
-from repro.kernels.rowclone import ops as rc_ops
+from repro.serving.pim_queue import PimOpQueue
 
 
 @dataclass
@@ -60,6 +69,7 @@ class PagedKVCache:
         self.refcount: Dict[int, int] = {}
         self.page_alloc: Dict[int, object] = {}
         self.seqs: Dict[int, Sequence] = {}
+        self.queue = PimOpQueue(use_pallas=use_pallas)
         self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0}
 
     # ------------------------- page management ------------------------ #
@@ -79,24 +89,21 @@ class PagedKVCache:
         return page
 
     def _release_page(self, page: int) -> None:
+        """Drop a reference; on the last one, enqueue a batched
+        RowClone-Init (zero without reading) and return the page to the
+        allocator.  The caller flushes — `free()` zeroes a whole
+        sequence's pages in one launch."""
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
-            # pim_init on free: zero the page without reading it.
-            idx = jnp.asarray([page], jnp.int32)
-            for l in range(self.n_layers):
-                self.k_arena = self.k_arena.at[l].set(
-                    rc_ops.pim_page_init(
-                        self.k_arena[l].reshape(self.k_arena.shape[1], -1),
-                        idx, 0.0, use_pallas=self.use_pallas
-                    ).reshape(self.k_arena.shape[1:]))
-                self.v_arena = self.v_arena.at[l].set(
-                    rc_ops.pim_page_init(
-                        self.v_arena[l].reshape(self.v_arena.shape[1], -1),
-                        idx, 0.0, use_pallas=self.use_pallas
-                    ).reshape(self.v_arena.shape[1:]))
+            self.queue.enqueue_init(page)
             self.stats["pages_zeroed"] += 1
             self.allocator.free(self.page_alloc.pop(page))
             del self.refcount[page]
+
+    def flush_pending(self) -> None:
+        """Drain the op queue: one coalesced launch per pending op kind."""
+        self.k_arena, self.v_arena = self.queue.flush(self.k_arena,
+                                                      self.v_arena)
 
     # ------------------------- sequence API ---------------------------- #
 
@@ -138,24 +145,20 @@ class PagedKVCache:
         dst.length = src.length
         dst.shared_prefix_pages = full
         self.seqs[dst_id] = dst
+        self.flush_pending()   # one batched copy launch per arena
         return dst
 
     def _copy_page(self, src: int, dst: int) -> None:
-        s = jnp.asarray([src], jnp.int32)
-        d = jnp.asarray([dst], jnp.int32)
-        for l in range(self.n_layers):
-            self.k_arena = self.k_arena.at[l].set(
-                rc_ops.pim_page_copy(
-                    self.k_arena[l].reshape(self.k_arena.shape[1], -1), s, d,
-                    use_pallas=self.use_pallas).reshape(self.k_arena.shape[1:]))
-            self.v_arena = self.v_arena.at[l].set(
-                rc_ops.pim_page_copy(
-                    self.v_arena[l].reshape(self.v_arena.shape[1], -1), s, d,
-                    use_pallas=self.use_pallas).reshape(self.v_arena.shape[1:]))
+        """Enqueue a full-depth (all layers) page copy; callers flush."""
+        self.queue.enqueue_copy(src, dst)
 
     def ensure_writable_tail(self, seq: Sequence) -> None:
         """Before appending: CoW if the tail page is shared; allocate a
-        fresh page on page-boundary crossings."""
+        fresh page on page-boundary crossings.
+
+        CoW copies are only *enqueued* here — the engine reserves every
+        active sequence's tail and then flushes once, so a decode round
+        pays one batched copy launch however many sequences CoW."""
         if seq.length % self.page_size == 0:
             seq.pages.append(self._alloc_page(
                 near=seq.pages[-1] if seq.pages else None))
@@ -174,26 +177,44 @@ class PagedKVCache:
         self.ensure_writable_tail(seq)
         page = seq.pages[-1]
         slot = seq.length % self.page_size
-        self.k_arena = self.k_arena.at[:, page, slot].set(k.astype(self.dtype))
-        self.v_arena = self.v_arena.at[:, page, slot].set(v.astype(self.dtype))
+        self.queue.enqueue_kv_write(page, slot, k, v)
+        self.flush_pending()   # CoW copy (if any) lands before the write
         seq.length += 1
+
+    def write_token_kv_batch(self, seq_ids: List[int], k: jax.Array,
+                             v: jax.Array) -> None:
+        """Decode-round bulk append: k, v (layers, batch, kvh, hd), one
+        vector per sequence in ``seq_ids``, written at each sequence's
+        current length.  Tails must already be reserved
+        (``ensure_writable_tail``); one scatter launch per arena covers
+        the whole batch."""
+        pages, slots = [], []
+        for sid in seq_ids:
+            seq = self.seqs[sid]
+            pages.append(seq.pages[-1])
+            slots.append(seq.length % self.page_size)
+        self.queue.enqueue_kv_writes(pages, slots, k, v)
+        self.flush_pending()
+        for sid in seq_ids:
+            self.seqs[sid].length += 1
 
     def write_prompt_kv(self, seq: Sequence, k: jax.Array, v: jax.Array,
                         start: int = 0) -> None:
-        """k, v: (layers, n, kvh, hd) — bulk write prefilled KV."""
+        """k, v: (layers, n, kvh, hd) — bulk write prefilled KV in one
+        coalesced scatter launch per arena (was: n separate updates)."""
         n = k.shape[1]
-        for i in range(n):
-            page = seq.pages[(start + i) // self.page_size]
-            slot = (start + i) % self.page_size
-            self.k_arena = self.k_arena.at[:, page, slot].set(
-                k[:, i].astype(self.dtype))
-            self.v_arena = self.v_arena.at[:, page, slot].set(
-                v[:, i].astype(self.dtype))
+        pages = [seq.pages[(start + i) // self.page_size] for i in range(n)]
+        slots = [(start + i) % self.page_size for i in range(n)]
+        self.queue.enqueue_kv_writes(pages, slots, k, v)
+        self.flush_pending()
 
     def free(self, seq_id: int) -> None:
+        """Release a sequence; all its dead pages zero in one batched
+        RowClone-Init launch per arena."""
         seq = self.seqs.pop(seq_id)
         for p in seq.pages:
             self._release_page(p)
+        self.flush_pending()
 
     def block_table(self, seq_ids: List[int], max_pages: int) -> Tuple[jax.Array, jax.Array]:
         bt = np.zeros((len(seq_ids), max_pages), np.int32)

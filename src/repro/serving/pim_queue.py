@@ -1,0 +1,199 @@
+"""Batched PiM operation scheduler: the deferred op queue.
+
+PiDRAM's end-to-end lesson is that in-DRAM ops only win when the dispatch
+path is amortized: one POC handshake per *batch* of row operations, not
+per row.  The serving analogue: every CoW fork, page free, and
+decode-round KV write used to issue ``O(num_layers)`` separate kernel
+launches from Python.  This queue collects those arena mutations as
+lightweight op records and flushes them as ONE coalesced launch per op
+kind per arena — a constant number of dispatches regardless of layer
+count or active-batch size.
+
+Design mirrors :class:`repro.core.memctrl.MemoryController`'s PiM
+sequence registry: each op *kind* registers a flush executor, so new
+batched ops are one ``register_kind`` call plus their executor (the
+software twin of the paper's "60 additional lines of Verilog"
+extensibility argument).
+
+Flush ordering is fixed and documented: ``page_copy`` ops land first
+(CoW source pages must be duplicated before anything overwrites them),
+then ``page_init`` (zeroing freed pages), then ``kv_write`` (fresh
+token KV).  Within a kind, op order follows enqueue order; duplicate
+destinations resolve to the last enqueued op.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.rowclone import ops as rc_ops
+
+# A flush executor: (queue, k_arena, v_arena, ops) -> (k_arena, v_arena).
+FlushFn = Callable[["PimOpQueue", jax.Array, jax.Array, list],
+                   Tuple[jax.Array, jax.Array]]
+
+
+@dataclass
+class KVWriteBatch:
+    """Pending slot writes: full-depth K/V for a batch of tokens,
+    kept stacked as (layers, batch, ...) so enqueue/flush do O(1) host
+    work in the batch size (no per-token slicing or re-stacking)."""
+
+    pages: List[int]
+    slots: List[int]
+    k: jax.Array      # (layers, batch, kvh, hd)
+    v: jax.Array
+
+    @property
+    def n(self) -> int:
+        return len(self.pages)
+
+
+class PimOpQueue:
+    """Deferred queue of arena mutations, flushed as coalesced launches."""
+
+    KIND_ORDER = ("page_copy", "page_init", "kv_write")
+
+    def __init__(self, *, use_pallas: bool = False) -> None:
+        self.use_pallas = use_pallas
+        self._kinds: Dict[str, FlushFn] = {}
+        self._pending: Dict[str, list] = {}
+        self.stats = {
+            "launches": 0,            # kernel dispatches issued (total)
+            "flushes": 0,             # flush() calls that launched anything
+            "ops_enqueued": 0,        # logical ops collected
+            "ops_coalesced": 0,       # logical ops folded into launches
+        }
+        self.launches_by_kind: Dict[str, int] = {}
+        for kind, fn in (("page_copy", _flush_page_copy),
+                         ("page_init", _flush_page_init),
+                         ("kv_write", _flush_kv_write)):
+            self.register_kind(kind, fn)
+
+    # -- extension registry (mirrors MemoryController.register_sequence) -- #
+
+    def register_kind(self, kind: str, fn: FlushFn) -> None:
+        self._kinds[kind] = fn
+        self._pending.setdefault(kind, [])
+        self.launches_by_kind.setdefault(kind, 0)
+
+    def has_kind(self, kind: str) -> bool:
+        return kind in self._kinds
+
+    # -- enqueue -------------------------------------------------------- #
+
+    def enqueue(self, kind: str, op, n_ops: int = 1) -> None:
+        if kind not in self._kinds:
+            raise KeyError(f"unknown PiM op kind {kind!r}")
+        self._pending[kind].append(op)
+        self.stats["ops_enqueued"] += n_ops
+
+    def enqueue_copy(self, src_page: int, dst_page: int) -> None:
+        self.enqueue("page_copy", (src_page, dst_page))
+
+    def enqueue_init(self, page: int) -> None:
+        self.enqueue("page_init", page)
+
+    def enqueue_kv_write(self, page: int, slot: int,
+                         k: jax.Array, v: jax.Array) -> None:
+        """Single token: k/v (layers, ...)."""
+        self.enqueue_kv_writes([page], [slot],
+                               jnp.asarray(k)[:, None], jnp.asarray(v)[:, None])
+
+    def enqueue_kv_writes(self, pages, slots, k: jax.Array,
+                          v: jax.Array) -> None:
+        """Bulk form: pages/slots length-B, k/v (layers, B, ...) — stored
+        stacked; no per-token host work.  An empty batch (e.g. a prompt
+        fully covered by a shared prefix) enqueues nothing, so the
+        launch counters only ever count real dispatches."""
+        if len(pages) == 0:
+            return
+        batch = KVWriteBatch([int(p) for p in pages], [int(s) for s in slots],
+                             k, v)
+        self.enqueue("kv_write", batch, n_ops=batch.n)
+
+    # -- flush ---------------------------------------------------------- #
+
+    @property
+    def pending_ops(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def _count_launch(self, kind: str, n: int = 1) -> None:
+        self.stats["launches"] += n
+        self.launches_by_kind[kind] += n
+
+    def flush(self, k_arena: jax.Array,
+              v_arena: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Drain the queue: one coalesced launch per op kind per arena.
+
+        Returns the updated arenas.  Launch count per flush is bounded by
+        ``2 * len(KIND_ORDER)`` no matter how many layers or sequences the
+        pending ops span.
+        """
+        if self.pending_ops == 0:
+            return k_arena, v_arena
+        any_launch = False
+        order = [k for k in self.KIND_ORDER if k in self._kinds]
+        order += [k for k in self._kinds if k not in order]
+        for kind in order:
+            ops = self._pending[kind]
+            if not ops:
+                continue
+            self._pending[kind] = []
+            k_arena, v_arena = self._kinds[kind](self, k_arena, v_arena, ops)
+            # logical ops, matching ops_enqueued (a KVWriteBatch record
+            # carries .n token writes)
+            self.stats["ops_coalesced"] += sum(getattr(o, "n", 1) for o in ops)
+            any_launch = True
+        if any_launch:
+            self.stats["flushes"] += 1
+        return k_arena, v_arena
+
+
+# ---------------------------------------------------------------------- #
+# Built-in flush executors
+# ---------------------------------------------------------------------- #
+
+
+def _flush_page_copy(q: PimOpQueue, k_arena, v_arena, ops):
+    src = jnp.asarray([s for s, _ in ops], jnp.int32)
+    dst = jnp.asarray([d for _, d in ops], jnp.int32)
+    k_arena = rc_ops.pim_page_copy_batched(k_arena, src, dst,
+                                           use_pallas=q.use_pallas)
+    v_arena = rc_ops.pim_page_copy_batched(v_arena, src, dst,
+                                           use_pallas=q.use_pallas)
+    q._count_launch("page_copy", 2)
+    return k_arena, v_arena
+
+
+def _flush_page_init(q: PimOpQueue, k_arena, v_arena, ops):
+    dst = jnp.asarray(ops, jnp.int32)
+    k_arena = rc_ops.pim_page_init_batched(k_arena, dst, 0.0,
+                                           use_pallas=q.use_pallas)
+    v_arena = rc_ops.pim_page_init_batched(v_arena, dst, 0.0,
+                                           use_pallas=q.use_pallas)
+    q._count_launch("page_init", 2)
+    return k_arena, v_arena
+
+
+def _flush_kv_write(q: PimOpQueue, k_arena, v_arena, ops: List[KVWriteBatch]):
+    pages = jnp.asarray([p for o in ops for p in o.pages], jnp.int32)
+    slots = jnp.asarray([s for o in ops for s in o.slots], jnp.int32)
+    if len(ops) == 1:              # the common case: already stacked
+        k_new, v_new = ops[0].k, ops[0].v
+    else:
+        k_new = jnp.concatenate([o.k for o in ops], axis=1)  # (L, B, ...)
+        v_new = jnp.concatenate([o.v for o in ops], axis=1)
+    k_arena = rc_ops.pim_kv_scatter(k_arena, pages, slots,
+                                    k_new.astype(k_arena.dtype),
+                                    use_pallas=q.use_pallas)
+    v_arena = rc_ops.pim_kv_scatter(v_arena, pages, slots,
+                                    v_new.astype(v_arena.dtype),
+                                    use_pallas=q.use_pallas)
+    q._count_launch("kv_write", 2)
+    return k_arena, v_arena

@@ -1,0 +1,104 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+When hypothesis is installed the test modules use it directly; when it
+is not (tier-1 runs from a clean checkout), this module supplies a thin
+fallback that turns ``@given(...)`` property sweeps into deterministic
+fixed-example ``pytest.mark.parametrize`` sets.  Strategies are tiny
+samplers over a seeded ``numpy`` generator — less adversarial than real
+hypothesis shrinking, but the oracles still get exercised across a
+spread of shapes/dtypes/values, and the suite collects and passes with
+no extra dependencies.
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # pragma: no cover
+        from _compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+import pytest
+
+#: fixed examples generated per @given when hypothesis is absent
+N_EXAMPLES = 6
+
+
+class _Strategy:
+    """A draw function rng -> value, mirroring the hypothesis strategies
+    the suite actually uses."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elem, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elem.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+
+
+st = _St()
+
+
+def settings(**_kw):
+    """No-op stand-in: example count is fixed at N_EXAMPLES; deadline
+    and max_examples are hypothesis concepts with no equivalent here."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**kwargs):
+    """Expand keyword strategies into N_EXAMPLES deterministic cases.
+
+    The seed derives from the test name, so examples are stable across
+    runs and machines (crc32, not ``hash``, which is salted per process).
+    """
+    names = list(kwargs)
+
+    def deco(fn):
+        rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+        cases = [tuple(kwargs[n].draw(rng) for n in names)
+                 for _ in range(N_EXAMPLES)]
+        if len(names) == 1:
+            # single-parameter parametrize takes bare values, not 1-tuples
+            cases = [c[0] for c in cases]
+        ids = [f"ex{i}" for i in range(N_EXAMPLES)]
+        return pytest.mark.parametrize(",".join(names), cases, ids=ids)(fn)
+    return deco

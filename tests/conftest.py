@@ -4,6 +4,9 @@ import sys
 # tests must see exactly 1 device (dry-run sets 512 in its own process)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# so `from _compat import ...` (optional-hypothesis shim) resolves even
+# when pytest is invoked from outside the repo root
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 import numpy as np

@@ -10,7 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _compat import given, settings, st
 
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_local_mesh
@@ -58,17 +62,26 @@ class TestGradCompression:
 
     @pytest.mark.slow
     def test_compressed_psum_close_to_exact_8dev(self):
-        """Run in a subprocess with 8 host devices."""
-        prog = textwrap.dedent("""
+        """Run in a subprocess with 8 host devices (4 on sub-8-core
+        boxes).  XLA host collectives spin-wait, so device threads far
+        beyond the core count deadlock rather than just slowing down —
+        below 4 cores there is no reliable configuration (2-device host
+        meshes deadlock outright in this jax version), so skip."""
+        cores = os.cpu_count() or 1
+        if cores < 4:
+            pytest.skip("host-mesh collectives deadlock with <4 cores")
+        world = 8 if cores >= 8 else 4
+        prog = textwrap.dedent(f"""
             import os
-            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={world}"
+            world = {world}
             import jax, jax.numpy as jnp, numpy as np
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
             from repro.distributed.compression import psum_compressed
-            mesh = jax.make_mesh((8,), ("data",))
+            mesh = jax.make_mesh((world,), ("data",))
             rng = np.random.default_rng(0)
-            x = jnp.asarray(rng.normal(size=(8, 257)).astype(np.float32))
+            x = jnp.asarray(rng.normal(size=(world, 257)).astype(np.float32))
             exact = shard_map(lambda v: jax.lax.psum(v, "data"), mesh=mesh,
                               in_specs=P("data"), out_specs=P(None),
                               check_rep=False)(x)

@@ -1,11 +1,16 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
-with hypothesis shape/dtype sweeps."""
+with hypothesis shape/dtype sweeps (fixed-example sweeps when
+hypothesis is not installed; see tests/_compat.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _compat import given, settings, st
 
 from repro.kernels.rowclone import ref as rc_ref, rowclone as rc
 from repro.kernels.drange import ref as dr_ref, drange as dr
@@ -52,6 +57,111 @@ class TestRowClone:
         dst = jnp.asarray([1, 5], jnp.int32)
         out = rc.page_init(arena, dst, 0.0, block_cols=64, interpret=True)
         np.testing.assert_array_equal(out, rc_ref.page_init(arena, dst, 0.0))
+
+
+class TestRowCloneBatched:
+    """Layer-batched page ops + KV scatter: one launch, all layers."""
+
+    @settings(**SETTINGS)
+    @given(layers=st.integers(1, 4), n_pages=st.integers(4, 16),
+           elems=st.integers(16, 200), n_copies=st.integers(1, 5),
+           seed=st.integers(0, 99))
+    def test_page_copy_batched_matches_ref(self, layers, n_pages, elems,
+                                           n_copies, seed):
+        n_copies = min(n_copies, n_pages // 2)
+        rng = np.random.default_rng(seed)
+        arena = jnp.asarray(
+            rng.normal(size=(layers, n_pages, elems)).astype(np.float32))
+        pages = rng.permutation(n_pages)
+        src = jnp.asarray(pages[:n_copies].astype(np.int32))
+        dst = jnp.asarray(pages[n_copies:2 * n_copies].astype(np.int32))
+        out = rc.page_copy_batched(arena, src, dst, block_cols=64,
+                                   interpret=True)
+        np.testing.assert_array_equal(
+            out, rc_ref.page_copy_batched(arena, src, dst))
+
+    @settings(**SETTINGS)
+    @given(layers=st.integers(1, 4), n_init=st.integers(1, 6),
+           value=st.floats(-5, 5, allow_nan=False))
+    def test_page_init_batched_matches_ref(self, layers, n_init, value):
+        arena = jnp.ones((layers, 12, 96), jnp.float32)
+        dst = jnp.asarray(
+            np.random.default_rng(n_init).permutation(12)[:n_init].astype(np.int32))
+        out = rc.page_init_batched(arena, dst, value, block_cols=64,
+                                   interpret=True)
+        np.testing.assert_allclose(
+            out, rc_ref.page_init_batched(arena, dst, value), rtol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(layers=st.integers(1, 4), batch=st.integers(1, 6),
+           ps=st.sampled_from([4, 8, 16]), elems=st.sampled_from([16, 48, 64]),
+           seed=st.integers(0, 99))
+    def test_kv_scatter_matches_ref(self, layers, batch, ps, elems, seed):
+        rng = np.random.default_rng(seed)
+        arena = jnp.asarray(
+            rng.normal(size=(layers, 8, ps, elems)).astype(np.float32))
+        # unique (page, slot) pairs — duplicate pairs are undefined
+        flat = rng.permutation(8 * ps)[:batch]
+        pages = jnp.asarray((flat // ps).astype(np.int32))
+        slots = jnp.asarray((flat % ps).astype(np.int32))
+        new = jnp.asarray(
+            rng.normal(size=(layers, batch, elems)).astype(np.float32))
+        out = rc.kv_scatter(arena, pages, slots, new, interpret=True)
+        np.testing.assert_array_equal(
+            out, rc_ref.kv_scatter(arena, pages, slots, new))
+
+    def test_single_layer(self):
+        arena = jnp.arange(2 * 64, dtype=jnp.float32).reshape(1, 2, 64)
+        out = rc.page_copy_batched(arena, jnp.asarray([0], jnp.int32),
+                                   jnp.asarray([1], jnp.int32),
+                                   block_cols=64, interpret=True)
+        np.testing.assert_array_equal(out[0, 1], arena[0, 0])
+
+    def test_non_aligned_page_elems(self):
+        # page_elems not a multiple of block_cols (or the VMEM lane width):
+        # interpret mode masks the ragged final column block
+        arena = jnp.asarray(np.random.default_rng(3).normal(
+            size=(2, 6, 100)).astype(np.float32))
+        src = jnp.asarray([0, 2], jnp.int32)
+        dst = jnp.asarray([1, 3], jnp.int32)
+        out = rc.page_copy_batched(arena, src, dst, block_cols=64,
+                                   interpret=True)
+        np.testing.assert_array_equal(
+            out, rc_ref.page_copy_batched(arena, src, dst))
+
+    def test_duplicate_destination_pages_init(self):
+        # duplicate destinations are well-defined for init (same fill)
+        arena = jnp.ones((2, 8, 32), jnp.float32)
+        dst = jnp.asarray([3, 3, 5], jnp.int32)
+        out = rc.page_init_batched(arena, dst, 0.0, block_cols=32,
+                                   interpret=True)
+        assert float(jnp.abs(out[:, [3, 5]]).sum()) == 0.0
+        assert float(jnp.abs(out[:, [0, 1, 2, 4, 6, 7]] - 1.0).sum()) == 0.0
+
+    def test_empty_op_batch_is_noop(self):
+        from repro.kernels.rowclone import ops as rc_ops
+        arena = jnp.ones((2, 4, 3, 16), jnp.float32)
+        empty = jnp.asarray([], jnp.int32)
+        out = rc_ops.pim_page_copy_batched(arena, empty, empty)
+        np.testing.assert_array_equal(out, jnp.ones((2, 4, 3, 16)))
+        out = rc_ops.pim_page_init_batched(out, empty, 0.0)
+        np.testing.assert_array_equal(out, jnp.ones((2, 4, 3, 16)))
+        out = rc_ops.pim_kv_scatter(out, empty, empty,
+                                    jnp.zeros((2, 0, 16), jnp.float32))
+        np.testing.assert_array_equal(out, jnp.ones((2, 4, 3, 16)))
+
+    def test_wrapper_pallas_matches_jnp_path(self):
+        from repro.kernels.rowclone import ops as rc_ops
+        rng = np.random.default_rng(11)
+        arena = jnp.asarray(rng.normal(size=(3, 10, 4, 2, 8)).astype(np.float32))
+        pages = jnp.asarray([1, 4, 7], jnp.int32)
+        slots = jnp.asarray([0, 3, 2], jnp.int32)
+        new = jnp.asarray(rng.normal(size=(3, 3, 2, 8)).astype(np.float32))
+        a = rc_ops.pim_kv_scatter(arena.copy(), pages, slots, new,
+                                  use_pallas=True, interpret=True)
+        b = rc_ops.pim_kv_scatter(arena.copy(), pages, slots, new,
+                                  use_pallas=False)
+        np.testing.assert_array_equal(a, b)
 
 
 class TestDRange:

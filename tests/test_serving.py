@@ -50,6 +50,7 @@ class TestPagedEngine:
         eng.submit(Request(0, prompt, max_new_tokens=5, temperature=0.0))
         assert eng.run()[0] == ref
 
+    @pytest.mark.slow
     def test_batched_requests_isolated(self, model, rng):
         cfg, params = model
         p1 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
@@ -114,6 +115,93 @@ class TestKVCacheUnit:
         cache.create(0, 8 * 4)
         with pytest.raises(PimAllocError):
             cache.create(1, 8)
+
+
+class TestDispatchCounts:
+    """Regression: arena mutations cost a CONSTANT number of kernel
+    launches, independent of num_layers and active-batch size (the
+    batched PiM op scheduler's contract)."""
+
+    @staticmethod
+    def _cache(layers, **kw):
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=layers)
+        return cfg, PagedKVCache(cfg, num_pages=32, page_size=4, **kw)
+
+    def test_cow_fork_launches_independent_of_layers(self):
+        counts = []
+        for layers in (1, 2, 4):
+            _, cache = self._cache(layers)
+            cache.create(0, 10)       # 2 full pages + partial tail
+            base = cache.queue.stats["launches"]
+            cache.fork(0, 1)
+            counts.append(cache.queue.stats["launches"] - base)
+        assert len(set(counts)) == 1, counts
+        assert counts[0] == 2         # one batched copy per arena (k, v)
+
+    def test_page_free_launches_independent_of_layers_and_size(self):
+        counts = []
+        for layers, prompt_len in ((1, 6), (2, 6), (4, 6), (2, 26)):
+            _, cache = self._cache(layers)
+            cache.create(0, prompt_len)
+            base = cache.queue.stats["launches"]
+            cache.free(0)
+            counts.append(cache.queue.stats["launches"] - base)
+        # 1..7 dead pages, 1..4 layers -> always one batched init per arena
+        assert set(counts) == {2}, counts
+
+    def test_prompt_write_launches_independent_of_length_and_layers(self):
+        counts = []
+        for layers, n in ((1, 3), (2, 9), (4, 14)):
+            cfg, cache = self._cache(layers)
+            seq = cache.create(0, n)
+            k = jnp.ones((cache.n_layers, n, cfg.num_kv_heads,
+                          cfg.resolved_head_dim))
+            base = cache.queue.stats["launches"]
+            cache.write_prompt_kv(seq, k, k)
+            counts.append(cache.queue.stats["launches"] - base)
+        assert set(counts) == {2}, counts   # one KV scatter per arena
+
+    @staticmethod
+    def _decode_round_launches(layers, nreqs, rng):
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=layers)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        for i in range(nreqs):
+            prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new_tokens=4, temperature=0.0))
+        while eng.queue:
+            eng._prefill(eng.queue.pop(0))
+        base = eng.cache.queue.stats["launches"]
+        eng._decode_round()
+        return eng.cache.queue.stats["launches"] - base
+
+    def test_decode_round_launches_independent_of_layers_and_batch(self, rng):
+        a = self._decode_round_launches(1, 1, rng)
+        b = self._decode_round_launches(2, 3, rng)
+        assert a == b, (a, b)
+        # at most: CoW-copy flush + KV-scatter flush, two arenas each
+        assert b <= 4
+
+    def test_full_prefix_hit_writes_nothing(self):
+        # a prompt fully covered by a shared prefix enqueues an empty KV
+        # batch -> no launch, no flush, counters stay truthful
+        cfg, cache = self._cache(2)
+        seq0 = cache.create(0, 8)
+        k = jnp.ones((cache.n_layers, 8, cfg.num_kv_heads,
+                      cfg.resolved_head_dim))
+        cache.write_prompt_kv(seq0, k, k)
+        cache.create(1, 8, share_with=0, shared_len=8)
+        base = dict(cache.queue.stats)
+        cache.write_prompt_kv(cache.seqs[1], k[:, 8:], k[:, 8:], start=8)
+        assert cache.queue.stats == base
+
+    def test_queue_coalesces_ops(self):
+        _, cache = self._cache(2)
+        cache.create(0, 26)           # 7 pages
+        cache.free(0)
+        q = cache.queue.stats
+        assert q["ops_enqueued"] == 7                 # 7 page inits...
+        assert cache.queue.launches_by_kind["page_init"] == 2  # ...2 launches
 
 
 class TestSampling:

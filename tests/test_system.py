@@ -120,6 +120,128 @@ class TestPOCProtocol:
         assert flags.ack and flags.fin and not flags.start
 
 
+class TestMemCtrlInvariants:
+    """Scheduler invariants under batched command sequences."""
+
+    @staticmethod
+    def _mc():
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        return MemoryController(dev)
+
+    def test_now_ns_monotonic_across_batches(self):
+        mc = self._mc()
+        stamps = [mc.now_ns]
+        for pairs in ([(0, 1)], [(0, 1), (2, 3), (4, 5)], [(1, 2)] * 5):
+            mc.run_sequence_batch("rowclone_copy", pairs)
+            stamps.append(mc.now_ns)
+        assert all(b >= a for a, b in zip(stamps, stamps[1:]))
+        trace_ts = [c.at_ns for c in mc.trace]
+        assert trace_ts == sorted(trace_ts)
+
+    def test_trace_and_stats_consistent_for_batches(self):
+        mc = self._mc()
+        rows = discover_subarrays(mc, max_rows=32).members[0][:6]
+        mc.trace.clear()
+        mc.stats["commands"] = mc.stats["pim_ops"] = 0
+        t0 = mc.now_ns
+        res = mc.run_sequence_batch("rowclone_copy",
+                                    list(zip(rows[0::2], rows[1::2])))
+        assert res.ok
+        assert mc.stats["commands"] == len(mc.trace)
+        assert res.commands == mc.trace          # whole trace is this batch
+        assert mc.stats["pim_ops"] == 3
+        assert mc.stats["pim_batches"] == 1
+        assert abs(res.elapsed_ns - (mc.now_ns - t0)) < 1e-9
+        # a second batch appends, never rewrites
+        before = list(mc.trace)
+        mc.run_sequence_batch("rowclone_copy", [(6, 7)])
+        assert mc.trace[:len(before)] == before
+        assert mc.stats["pim_batches"] == 2
+
+    def test_batch_elapsed_equals_sum_of_singles(self):
+        a, b = self._mc(), self._mc()
+        singles = sum(a.run_sequence("rowclone_copy", 0, 1).elapsed_ns
+                      for _ in range(4))
+        batched = b.run_sequence_batch("rowclone_copy", [(0, 1)] * 4).elapsed_ns
+        # command timing doesn't amortize — only the POC handshake does
+        assert abs(batched - singles) < 1e-9
+
+    def test_batch_ok_is_conjunction(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        smap = discover_subarrays(mc, max_rows=32)
+        same_a, same_b = smap.members[0][:2]
+        other = next(r for r in range(32) if not smap.same_subarray(same_a, r))
+        # second pair crosses subarrays -> that RowClone fails, batch ok=False
+        res = mc.run_sequence_batch("rowclone_copy",
+                                    [(same_a, same_b), (same_a, other)])
+        assert not res.ok
+
+    def test_batched_speedups_within_paper_ranges(self, proto):
+        _, mc = proto
+        costs = EndToEndCosts(mc)
+        sp = costs.speedups()
+        sp1 = costs.batched_speedups(1)
+        for k in PAPER:
+            assert abs(sp1[k] - sp[k]) / sp[k] < 1e-9   # n=1 degenerates
+        prev = sp1
+        for n in (2, 4, 16, 64):
+            b = costs.batched_speedups(n)
+            for k in PAPER:
+                assert b[k] >= prev[k] - 1e-9           # monotone in n
+            # coherent speedups stay in the paper's ballpark: the cache
+            # maintenance cost is per-row and does not amortize
+            assert PAPER["copy_coherence"] <= b["copy_coherence"] \
+                <= 1.2 * PAPER["copy_coherence"]
+            assert PAPER["init_coherence"] <= b["init_coherence"] \
+                <= 1.2 * PAPER["init_coherence"]
+            prev = b
+
+    def test_batched_handshake_cheaper_than_looped(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        smap = discover_subarrays(mc, max_rows=32)
+        alloc = allocator_from_subarray_map(smap)
+        lib = DeviceLib(PimOpsController(mc), alloc)
+        src, dst = alloc.alloc_copy_pair(4)
+        looped = lib.copy(src, dst, batch=False).latency_ns
+        batched = lib.copy(src, dst, batch=True).latency_ns
+        saved = 3 * mc.poc_handshake_ns()   # 4 handshakes -> 1
+        assert abs((looped - batched) - saved) / saved < 0.05
+
+    def test_poc_batch_single_handshake_flags(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        poc = PimOpsController(mc)
+        rows = discover_subarrays(mc, max_rows=32).members[0][:4]
+        mc.stats["pim_batches"] = 0
+        words = [Instruction(Opcode.RC_COPY, rows[0], rows[1]).encode(),
+                 Instruction(Opcode.RC_COPY, rows[2], rows[3]).encode()]
+        poc.store_instruction_buffer(words)
+        poc.store_start()
+        flags = poc.load_flags()
+        assert flags.ack and flags.fin and not flags.start
+        assert poc.last_ok
+        assert mc.stats["pim_batches"] == 1
+        assert poc.stats.executed["RC_COPY"] == 2
+
+    def test_poc_empty_batch_is_noop(self):
+        dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))
+        mc = MemoryController(dev)
+        poc = PimOpsController(mc)
+        # leave a stale word in the instruction register...
+        poc.store_instruction(Instruction(Opcode.RC_COPY, 0, 1).encode())
+        poc.store_start()
+        executed_before = dict(poc.stats.executed)
+        t_before = mc.now_ns
+        # ...then an EMPTY staged batch must not re-execute it
+        poc.store_instruction_buffer([])
+        poc.store_start()
+        assert poc.load_flags().fin and poc.last_ok
+        assert dict(poc.stats.executed) == executed_before
+        assert mc.now_ns == t_before
+
+
 class TestDRaNGe:
     def test_trng_end_to_end(self):
         dev = SimulatedDRAM(DRAMGeometry(num_subarrays=4, rows_per_subarray=16))

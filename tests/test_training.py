@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _compat import given, settings, st
 
 from repro.configs import ARCHS, OptimizerConfig, ParallelConfig, reduced
 from repro.models import transformer as T
