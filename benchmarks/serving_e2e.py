@@ -1,14 +1,24 @@
 """End-to-end serving comparison (paper's system-level claim, transposed
-to the TPU framework): RowClone-backed paged KV management (CoW fork +
-prefix sharing + pim_init page recycling) vs a naive engine that
-re-prefills shared prefixes and copies caches through compute.
+to the TPU framework), two tables:
 
-Metric: modeled data-movement bytes through the compute units + measured
-engine statistics.  Mirrors the paper's copy/init table at the system
-level (Table: serving with in-memory page ops)."""
+1. RowClone-backed paged KV management (CoW fork + prefix sharing +
+   pim_init page recycling) vs a naive engine that re-prefills shared
+   prefixes — the paper's copy/init table at the system level.
+
+2. Fused single-dispatch decode round (jitted scan-over-layers,
+   in-kernel self-token merge, in-jit scatter + sampling) vs the
+   pre-fusion eager layer loop: decode tokens/s, kernel dispatches per
+   round, and jit retrace counts.
+
+Metrics print as ``name,us_per_call,derived`` CSV and the fusion numbers
+are also written to ``BENCH_serving.json`` so CI tracks them per PR.
+Pass ``--smoke`` for the CI-sized configuration.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -20,16 +30,61 @@ from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.serving.engine import PagedEngine, Request
 
+# anchored to the repo root so the tracked snapshot updates no matter
+# which directory the benchmark runs from; smoke runs write a separate
+# file so the CI-sized numbers never overwrite the full-config snapshot
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_serving.json")
+BENCH_JSON_SMOKE = os.path.join(_ROOT, "BENCH_serving.smoke.json")
 
-def main(out=sys.stdout):
+
+def _decode_throughput(cfg, params, rng, *, fused: bool, n_reqs: int,
+                       prompt_len: int, new_tokens: int, page_size: int):
+    """Decode tokens/s + dispatches/round for one engine mode.
+
+    Warmup batch first (pays jit traces), then a timed batch on the same
+    engine: a dispatch-count probe over two mid-flight rounds, then the
+    remaining rounds under the clock (decode only — prefills excluded).
+    """
+    eng = PagedEngine(cfg, params, page_size=page_size, num_pages=256,
+                      fused=fused)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_reqs)]
+    for i, p in enumerate(prompts):                       # warmup batch
+        eng.submit(Request(i, p, max_new_tokens=new_tokens, temperature=0.0))
+    eng.run()
+    for i, p in enumerate(prompts):                       # timed batch
+        eng.submit(Request(n_reqs + i, p, max_new_tokens=new_tokens,
+                           temperature=0.0))
+    while eng.queue:
+        eng._prefill(eng.queue.pop(0))
+    probe_rounds = 2
+    base_launch = eng.cache.queue.stats["launches"]
+    for _ in range(probe_rounds):
+        eng._decode_round()
+    dispatches = (eng.cache.queue.stats["launches"] - base_launch) / probe_rounds
+    base_tok = eng.stats["tokens_out"]
+    t0 = time.perf_counter()
+    eng.run()                                             # decode to done
+    dt = time.perf_counter() - t0
+    decoded = eng.stats["tokens_out"] - base_tok
+    return {
+        "tok_s": decoded / dt if dt > 0 else float("inf"),
+        "decoded_tokens": decoded,
+        "dispatches_per_round": dispatches,
+        "jit_traces": eng.stats["jit_traces"],
+    }
+
+
+def main(out=sys.stdout, smoke: bool = False):
     print("name,us_per_call,derived", file=out)
     cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
     params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
-    N, NEW, PS = 6, 4, 8
+    N, NEW, PS = (2, 6, 8) if smoke else (6, 4, 8)
 
-    # shared-prefix workload WITH pim page ops
+    # ---- table 1: shared-prefix workload WITH pim page ops ------------- #
     t0 = time.perf_counter()
     eng = PagedEngine(cfg, params, page_size=PS, num_pages=128)
     for i in range(N):
@@ -59,6 +114,37 @@ def main(out=sys.stdout):
           f"speedup={us_naive/us_pim:.2f}x", file=out)
     assert res[0] == res2[0]
 
+    # ---- table 2: fused single-dispatch decode round vs eager loop ----- #
+    dec = dict(n_reqs=(2 if smoke else 4), prompt_len=16,
+               new_tokens=(8 if smoke else 16), page_size=4)
+    fstats = _decode_throughput(cfg, params, rng, fused=True, **dec)
+    estats = _decode_throughput(cfg, params, rng, fused=False, **dec)
+    speedup = fstats["tok_s"] / estats["tok_s"]
+    print(f"decode_fused,{1e6/max(fstats['tok_s'],1e-9):.0f},"
+          f"tok_s={fstats['tok_s']:.1f}"
+          f";dispatches_per_round={fstats['dispatches_per_round']:.1f}"
+          f";jit_traces={fstats['jit_traces']}", file=out)
+    print(f"decode_eager,{1e6/max(estats['tok_s'],1e-9):.0f},"
+          f"tok_s={estats['tok_s']:.1f}"
+          f";dispatches_per_round={estats['dispatches_per_round']:.1f}",
+          file=out)
+    print(f"decode_fusion_speedup,0,{speedup:.2f}x", file=out)
+
+    bench = {
+        "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec},
+        "decode_tok_s_fused": round(fstats["tok_s"], 2),
+        "decode_tok_s_eager": round(estats["tok_s"], 2),
+        "decode_fusion_speedup": round(speedup, 2),
+        "dispatches_per_round_fused": fstats["dispatches_per_round"],
+        "dispatches_per_round_eager": estats["dispatches_per_round"],
+        "jit_traces_fused": fstats["jit_traces"],
+        "decoded_tokens": fstats["decoded_tokens"],
+    }
+    path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"# wrote {path}", file=out)
+
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

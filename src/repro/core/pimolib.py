@@ -187,45 +187,88 @@ class TpuArena:
 
 
 class TpuLib:
-    """pimolib over a JAX arena (serving/training integration point)."""
+    """pimolib over a JAX arena (serving/training integration point).
 
-    def __init__(self, arena: TpuArena, *, use_pallas: bool = False) -> None:
-        from repro.kernels.rowclone import ops as rc_ops
+    Arena mutations route through the batched PiM op scheduler
+    (:class:`repro.serving.pim_queue.PimOpQueue`) — the same queue the
+    serving-side paged KV cache uses — so training-side users get op
+    coalescing and unified launch accounting for free.  By default every
+    call still flushes immediately (the historical synchronous
+    semantics); construct with ``deferred=True`` (or toggle the
+    attribute) to collect ops across calls and pay one coalesced launch
+    per op kind at :meth:`flush`.  Deferred mode preserves program-order
+    results: an op that touches a row a pending op already touched, or
+    that mixes kinds with pending work, flushes the backlog first (the
+    common bulk case — many same-kind ops on disjoint rows — still
+    coalesces to one launch).  Reads flush implicitly, and
+    ``Blocking.FIN`` is always a full synchronization point.
+    """
+
+    def __init__(self, arena: TpuArena, *, use_pallas: bool = False,
+                 deferred: bool = False) -> None:
         from repro.kernels.drange import ops as dr_ops
+        from repro.serving.pim_queue import PimOpQueue
         self.arena = arena
         self.use_pallas = use_pallas
-        self._rc = rc_ops
+        self.deferred = deferred
+        self.queue = PimOpQueue(use_pallas=use_pallas)
         self._dr = dr_ops
+        self._pending_rows: set = set()
+        self._pending_kind: Optional[str] = None
         self.stats = {"copies": 0, "inits": 0, "rand_words": 0}
+
+    def _admit(self, kind: str, rows) -> None:
+        """Flush the backlog when enqueueing would break program order:
+        the queue replays by kind (copies before inits), so mixed kinds
+        or row reuse must not coalesce across the hazard."""
+        if self.queue.pending_ops and (
+                self._pending_kind != kind
+                or any(r in self._pending_rows for r in rows)):
+            self.flush()
+        self._pending_kind = kind
+        self._pending_rows.update(rows)
 
     def copy_pages(self, src: Allocation, dst: Allocation,
                    blocking: Blocking = Blocking.ACK) -> None:
         if src.group != dst.group or src.nrows != dst.nrows:
             raise ValueError("copy operands must be same-slab, same size")
-        self.arena.buffer = self._rc.pim_page_copy(
-            self.arena.buffer, jnp.asarray(src.rows, jnp.int32),
-            jnp.asarray(dst.rows, jnp.int32), use_pallas=self.use_pallas)
-        if blocking is Blocking.FIN:
-            self.arena.buffer.block_until_ready()
+        self._admit("page_copy", list(src.rows) + list(dst.rows))
+        for s, d in zip(src.rows, dst.rows):
+            self.queue.enqueue_copy(s, d)
         self.stats["copies"] += src.nrows
+        if not self.deferred or blocking is Blocking.FIN:
+            self.flush(blocking)
 
     def init_pages(self, dst: Allocation, value=0.0,
                    blocking: Blocking = Blocking.ACK) -> None:
-        self.arena.buffer = self._rc.pim_page_init(
-            self.arena.buffer, jnp.asarray(dst.rows, jnp.int32), value,
-            use_pallas=self.use_pallas)
+        self._admit("page_init", dst.rows)
+        for d in dst.rows:
+            self.queue.enqueue_init(d, value)
+        self.stats["inits"] += dst.nrows
+        if not self.deferred or blocking is Blocking.FIN:
+            self.flush(blocking)
+
+    def flush(self, blocking: Blocking = Blocking.ACK) -> None:
+        """Drain pending ops: one coalesced launch per op kind.  The
+        (pages, elems) buffer flushes as a single-layer arena view."""
+        if self.queue.pending_ops:
+            (buf,) = self.queue.flush(self.arena.buffer[None])
+            self.arena.buffer = buf[0]
+        self._pending_rows.clear()
+        self._pending_kind = None
         if blocking is Blocking.FIN:
             self.arena.buffer.block_until_ready()
-        self.stats["inits"] += dst.nrows
 
     def rand(self, seed: jax.Array, n_rows: int, n_cols: int) -> jax.Array:
         self.stats["rand_words"] += n_rows * n_cols
         return self._dr.pim_random_u32(seed, n_rows, n_cols, use_pallas=self.use_pallas)
 
     def read_pages(self, alloc: Allocation) -> jax.Array:
+        self.flush()   # deferred mutations land before any read
         return self.arena.buffer[jnp.asarray(alloc.rows, jnp.int32)]
 
     def write_pages(self, alloc: Allocation, values: jax.Array) -> None:
+        self.flush()   # preserve enqueue order vs direct writes
         self.arena.buffer = self.arena.buffer.at[
             jnp.asarray(alloc.rows, jnp.int32)].set(values.astype(self.arena.buffer.dtype))
 

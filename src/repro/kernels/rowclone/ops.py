@@ -96,13 +96,15 @@ def pim_page_init_batched(arena: jax.Array, dst_pages: jax.Array, value,
     return out.reshape(arena.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"), donate_argnums=(0,))
-def pim_kv_scatter(arena: jax.Array, pages: jax.Array, slots: jax.Array,
-                   new: jax.Array, *, use_pallas: bool = False,
-                   interpret: bool = not _ON_TPU) -> jax.Array:
+def kv_scatter_inline(arena: jax.Array, pages: jax.Array, slots: jax.Array,
+                      new: jax.Array, *, use_pallas: bool = False,
+                      interpret: bool = not _ON_TPU) -> jax.Array:
     """Write ``arena[:, pages[b], slots[b]] <- new[:, b]`` in one launch.
 
     arena: (layers, pages, page_size, ...); new: (layers, batch, ...).
+    Un-jitted body, so callers already inside a compiled computation
+    (the serving engine's fused decode step) can trace it without a
+    nested donation; ``pim_kv_scatter`` is the jitted/donating wrapper.
     """
     if pages.shape[0] == 0:
         return arena
@@ -115,3 +117,8 @@ def pim_kv_scatter(arena: jax.Array, pages: jax.Array, slots: jax.Array,
     else:
         out = rowclone.kv_scatter(a4, pages, slots, n3, interpret=interpret)
     return out.reshape(arena.shape)
+
+
+pim_kv_scatter = functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret"),
+    donate_argnums=(0,))(kv_scatter_inline)

@@ -10,18 +10,36 @@ the arena; the model's dense-cache path is never materialized.  Forking
 (`n>1` samples sharing a prompt) uses the cache's RowClone CoW.
 Sampling consumes the D-RaNGe TPU generator (`pim_rand`).
 
-Arena mutations go through the cache's batched PiM op scheduler: a
-decode round issues one flush for the round's CoW copies (before
-attention reads the arena) and one for the round's KV scatter — a
-constant number of kernel launches per round, independent of
-``num_layers`` and the active-batch size.
+A decode round is ONE compiled dispatch (the fused decode step):
+
+* the layer loop is a ``jax.lax.scan`` over the stacked ``group0``
+  params and the per-layer arena slices, so the traced program is O(1)
+  in depth;
+* the current token's K/V merge into attention happens *inside* the
+  paged-attention kernel (``k_self``/``v_self``) — no post-kernel pass
+  re-reads the arena history;
+* the round's KV scatter and the token selection (greedy argmax or
+  D-RaNGe inverse-CDF sample, per request) run in the same jit, with
+  both arenas donated on backends that support donation, so the round
+  issues no separate mutation launch and exactly one device->host
+  transfer (the chosen tokens);
+* block-table widths and the active batch are bucketed to powers of two
+  (padding rows duplicate sequence 0, whose duplicate scatter writes
+  identical values to identical slots), so growing/forking workloads
+  retrace only at bucket boundaries — ``stats["jit_traces"]`` counts
+  retraces, ``PimOpQueue`` counts dispatches.
+
+Pre-round CoW copies still route through the cache's batched PiM op
+scheduler: one coalesced copy flush (only when some sequence forks)
+lands before the fused step reads the arena.  ``fused=False`` keeps the
+pre-fusion eager path (a Python loop over layers, one launch per layer)
+as the benchmark baseline.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,10 +48,11 @@ import numpy as np
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.kernels.drange import ops as dr_ops
 from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.rowclone import ops as rc_ops
 from repro.models import transformer as T
-from repro.models import attention as attn_mod
-from repro.models.layers import rmsnorm, cast, logits_out, embed, apply_rope, rope_sincos
-from .kv_cache import PagedKVCache
+from repro.models.layers import (rmsnorm, cast, logits_out, embed, mlp,
+                                 apply_rope, rope_sincos)
+from .kv_cache import PagedKVCache, _bucket_pow2
 
 
 @dataclass
@@ -53,7 +72,8 @@ class PagedEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, page_size: int = 16,
                  num_pages: int = 256, pcfg: Optional[ParallelConfig] = None,
-                 seed: int = 0, use_pallas: bool = False):
+                 seed: int = 0, use_pallas: bool = False,
+                 interpret: Optional[bool] = None, fused: bool = True):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
         self.params = params
@@ -61,11 +81,18 @@ class PagedEngine:
         self.cache = PagedKVCache(cfg, num_pages=num_pages,
                                   page_size=page_size, use_pallas=use_pallas)
         self.use_pallas = use_pallas
+        # interpret-mode plumbing (was hardcoded True): default follows
+        # the backend — compiled kernels on TPU, interpreter elsewhere
+        self.interpret = ((jax.default_backend() != "tpu")
+                          if interpret is None else interpret)
+        self.fused = fused
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.rng_seed = jnp.asarray([seed, seed ^ 0x9E3779B9], jnp.uint32)
         self.rng_ctr = 0
-        self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0}
+        self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0,
+                      "jit_traces": 0, "fused_dispatches": 0}
+        self._step = self._build_fused_step() if fused else None
 
     # ----------------------------- API -------------------------------- #
 
@@ -94,6 +121,27 @@ class PagedEngine:
     def _layer_params(self):
         return self.params["group0"]
 
+    def _build_fused_step(self):
+        """One jit covering forward + KV scatter + token selection.
+
+        The Python body only runs when jax traces (cache miss), so the
+        closure's counter bump is exactly a retrace counter.  Arenas are
+        donated where the backend supports it (TPU/GPU) so the in-jit
+        scatter is an in-place update.
+        """
+        eng = self
+
+        def step(params, last, k_arena, v_arena, bt, lens, pages, slots,
+                 seed, temps):
+            eng.stats["jit_traces"] += 1
+            return _fused_decode_step(
+                eng.cfg, eng.pcfg, params, last, k_arena, v_arena, bt, lens,
+                pages, slots, seed, temps, use_pallas=eng.use_pallas,
+                interpret=eng.interpret)
+
+        donate = (2, 3) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(step, donate_argnums=donate)
+
     def _prefill(self, req: Request) -> None:
         cfg, p = self.cfg, self.params
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
@@ -121,124 +169,225 @@ class PagedEngine:
     def _decode_round(self) -> None:
         if not self.active:
             return
-        cfg, p = self.cfg, self.params
         rids = sorted(self.active)
-        last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
-                           jnp.int32)
         # reserve the slot for the incoming token on every sequence; the
         # CoW copies all land in ONE batched launch before attention reads
         # the arena (constant dispatch count, however many sequences fork)
         for r in rids:
             self.cache.ensure_writable_tail(self.cache.seqs[r])
         self.cache.flush_pending()
-        max_pages = max(len(self.cache.seqs[r].pages) for r in rids)
-        bt, lens = self.cache.block_table(rids, max_pages)
-
-        logits, k_new, v_new = _paged_decode_forward(
-            cfg, self.pcfg, p, last, self.cache.k_arena, self.cache.v_arena,
-            bt, lens, use_pallas=self.use_pallas)
-
-        # scatter the whole round's new KV (all layers, all sequences) in
-        # one coalesced launch per arena
-        self.cache.write_token_kv_batch(rids, k_new[:, :, 0], v_new[:, :, 0])
-        sampled = self._sample(logits[:, 0], 1.0)
-        greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        if self.fused:
+            toks = self._decode_round_fused(rids)
+        else:
+            toks = self._decode_round_eager(rids)
         for i, r in enumerate(rids):
-            t = self.active[r].temperature
-            self.active[r].out_tokens.append(int(greedy[i] if t == 0.0
-                                                 else sampled[i]))
+            self.active[r].out_tokens.append(int(toks[i]))
         self.stats["decode_rounds"] += 1
         self.stats["tokens_out"] += len(rids)
 
+    def _decode_round_fused(self, rids: List[int]) -> np.ndarray:
+        """One compiled dispatch for the whole round; one host transfer."""
+        B = len(rids)
+        Bp = _bucket_pow2(B)
+        # batch bucketing: pad rows duplicate sequence 0 — the duplicate
+        # attention is wasted compute, and the duplicate scatter writes
+        # the *same* values to the *same* (page, slot), so it is a no-op
+        idx = list(range(B)) + [0] * (Bp - B)
+        seqs = [self.cache.seqs[rids[i]] for i in idx]
+        last = np.asarray([[self.active[rids[i]].out_tokens[-1]]
+                           for i in idx], np.int32)
+        temps = np.asarray([self.active[rids[i]].temperature for i in idx],
+                           np.float32)
+        pages = np.asarray([s.pages[-1] for s in seqs], np.int32)
+        slots = np.asarray([s.length % self.cache.page_size for s in seqs],
+                           np.int32)
+        bt, lens = self.cache.block_table([rids[i] for i in idx])
+        self.rng_ctr += 1
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        tokens, k_arena, v_arena = self._step(
+            self.params, jnp.asarray(last), self.cache.k_arena,
+            self.cache.v_arena, bt, lens, jnp.asarray(pages),
+            jnp.asarray(slots), seed, jnp.asarray(temps))
+        self.cache.commit_fused_round(rids, k_arena, v_arena)
+        self.stats["fused_dispatches"] += 1
+        return np.asarray(tokens)[:B]      # the round's one host transfer
+
+    def _decode_round_eager(self, rids: List[int]) -> np.ndarray:
+        """Pre-fusion baseline: Python layer loop, separate scatter."""
+        last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
+                           jnp.int32)
+        bt, lens = self.cache.block_table(rids)
+        logits, k_new, v_new = _eager_decode_forward(
+            self.cfg, self.pcfg, self.params, last, self.cache.k_arena,
+            self.cache.v_arena, bt, lens, use_pallas=self.use_pallas,
+            interpret=self.interpret)
+        # account the per-layer jitted paged-attention dispatches (the
+        # O(num_layers) launches fusion removes) so fused-vs-eager
+        # dispatch comparisons measure the real gap
+        self.cache.queue.count_external("eager_attn_layer",
+                                        self.cache.n_layers)
+        # scatter the whole round's new KV (all layers, all sequences) in
+        # one coalesced launch per arena
+        self.cache.write_token_kv_batch(rids, k_new[:, :, 0], v_new[:, :, 0])
+        temps = jnp.asarray([self.active[r].temperature for r in rids],
+                            jnp.float32)
+        self.rng_ctr += 1
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        toks = _select_tokens(logits[:, 0], temps, seed,
+                              use_pallas=self.use_pallas,
+                              interpret=self.interpret)
+        return np.asarray(toks)            # one host transfer
+
     def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        """Prefill-time sampling: delegates to the round sampler so the
+        inverse-CDF draw has exactly one implementation."""
         if temperature == 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1))
-        # D-RaNGe randomness: uniform from the pim TRNG kernel
         self.rng_ctr += 1
-        u = dr_ops.pim_random_uniform(
-            self.rng_seed + jnp.uint32(self.rng_ctr), logits.shape[0], 1,
-            use_pallas=self.use_pallas)[:, 0]
-        probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        temps = jnp.full((logits.shape[0],), temperature, jnp.float32)
+        return np.asarray(_select_tokens(logits, temps, seed,
+                                         use_pallas=self.use_pallas,
+                                         interpret=self.interpret))
+
+
+# ---------------------------------------------------------------------- #
+# Fused decode step (traced under one jax.jit per engine)
+# ---------------------------------------------------------------------- #
+
+
+def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
+                       pages, slots, seed, temps, *, use_pallas: bool,
+                       interpret: bool):
+    """Forward (scan over layers) + KV scatter + token selection: the
+    whole decode round as one compiled program over donated arenas."""
+    logits, k_new, v_new = _paged_decode_forward(
+        cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
+        use_pallas=use_pallas, interpret=interpret)
+    k_arena = rc_ops.kv_scatter_inline(
+        k_arena, pages, slots, k_new[:, :, 0].astype(k_arena.dtype),
+        use_pallas=use_pallas, interpret=interpret)
+    v_arena = rc_ops.kv_scatter_inline(
+        v_arena, pages, slots, v_new[:, :, 0].astype(v_arena.dtype),
+        use_pallas=use_pallas, interpret=interpret)
+    tokens = _select_tokens(logits[:, 0], temps, seed,
+                            use_pallas=use_pallas, interpret=interpret)
+    return tokens, k_arena, v_arena
+
+
+def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
+                   use_pallas: bool, interpret: bool) -> jax.Array:
+    """Per-request token choice: greedy rows take the argmax, sampled
+    rows take a D-RaNGe inverse-CDF draw at their own temperature.  An
+    all-greedy batch skips the TRNG + softmax entirely (lax.cond), and
+    nothing here syncs to host — callers do one transfer per round."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def sampled(_):
+        u = dr_ops.pim_random_uniform(seed, logits.shape[0], 1,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)[:, 0]
+        t = jnp.where(temps > 0.0, temps, 1.0)
+        probs = jax.nn.softmax(logits.astype(jnp.float32) / t[:, None], axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        return np.asarray(jnp.argmax(cum > u[:, None], axis=-1))
+        drawn = jnp.argmax(cum > u[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(temps == 0.0, greedy, drawn)
+
+    return jax.lax.cond(jnp.all(temps == 0.0), lambda _: greedy, sampled,
+                        operand=None)
+
+
+def _decode_layer(cfg, kind, sp, x, sin, cos, k_l, v_l, attend):
+    """One sublayer of the single-token decode forward — the one source
+    of truth shared by the fused scan body and the eager baseline loop.
+    ``attend(q, k_self, v_self)`` supplies the paged-attention call (the
+    two paths differ only in how that dispatch is issued).  Returns
+    (x, (k_tok, v_tok) | None)."""
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(x, sp["norm"], cfg.norm_eps)
+    if kind != "attn":
+        return x + mlp(sp["mlp"], h, cfg.activation), None
+    q = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wv"]))
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    # attention over arena pages with the fresh token (not yet written)
+    # merged in-kernel
+    o = attend(q[:, 0], k_l, v_l, k[:, 0], v[:, 0])
+    out = jnp.einsum("bshk,hkd->bsd", o[:, None], cast(sp["attn"]["wo"]))
+    return x + out, (k[:, 0], v[:, 0])
 
 
 def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                           v_arena, block_tables, lengths, *,
-                          use_pallas: bool = False):
-    """Decoder forward for one token using paged attention per layer.
+                          use_pallas: bool = False, interpret: bool = True):
+    """Decoder forward for one token: ``lax.scan`` over the stacked
+    layer params and the per-layer arena slices — O(1) program size in
+    depth, and the current token's K/V merges inside the paged kernel.
 
     Returns (logits (b,1,V), k_new, v_new (L, b, 1, kvh, hd)).
-    Python loop over layers (host engine; CPU-scale models).
     """
     hd = cfg.resolved_head_dim
     x = embed(params["embed"], tokens, cfg)
     positions = lengths[:, None].astype(jnp.int32)  # token pos == length
-    gparams = params["group0"]
-    L = T.layer_groups(cfg)[0][0]
+    sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
+
+    def attend(q, k_l, v_l, k_self, v_self):
+        return pa_ops.paged_attention_inline(
+            q, k_l, v_l, block_tables, lengths, sm_scale=hd ** -0.5,
+            use_pallas=use_pallas, interpret=interpret,
+            k_self=k_self, v_self=v_self)
+
+    def body(x, xs):
+        p_layer, k_l, v_l = xs
+        k_tok = v_tok = None
+        for i, kind in enumerate(kinds):
+            x, kv = _decode_layer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, k_l, v_l, attend)
+            if kv is not None:
+                k_tok, v_tok = kv
+        return x, (k_tok, v_tok)
+
+    x, (k_news, v_news) = jax.lax.scan(
+        body, x, (params["group0"], k_arena, v_arena))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_out(params["embed"], x, cfg)
+    return logits, k_news[:, :, None], v_news[:, :, None]
+
+
+def _eager_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
+                          v_arena, block_tables, lengths, *,
+                          use_pallas: bool = False, interpret: bool = True):
+    """Pre-fusion baseline: Python loop over layers, one jitted
+    paged-attention dispatch per layer.  Shares ``_decode_layer`` with
+    the fused path (the self-token merge still happens in-kernel — the
+    old full-history re-reading merge pass is gone)."""
+    hd = cfg.resolved_head_dim
+    x = embed(params["embed"], tokens, cfg)
+    positions = lengths[:, None].astype(jnp.int32)  # token pos == length
+    sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+    gparams = params["group0"]
+    L, kinds = T.layer_groups(cfg)[0]
+
+    def attend(q, k_l, v_l, k_self, v_self):
+        return pa_ops.paged_attention(
+            q, k_l, v_l, block_tables, lengths, sm_scale=hd ** -0.5,
+            use_pallas=use_pallas, interpret=interpret,
+            k_self=k_self, v_self=v_self)
+
     k_news, v_news = [], []
     for li in range(L):
         p_layer = jax.tree.map(lambda a: a[li], gparams)
         for i, kind in enumerate(kinds):
-            sp = p_layer[f"{i}_{kind}"]
-            h = rmsnorm(x, sp["norm"], cfg.norm_eps)
-            if kind == "attn":
-                q = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wq"]))
-                k = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wk"]))
-                v = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wv"]))
-                sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
-                q = apply_rope(q, sin, cos)
-                k = apply_rope(k, sin, cos)
-                k_news.append(k[:, 0][None])   # (1, b, kvh, hd)
-                v_news.append(v[:, 0][None])
-                # attention over arena pages + the fresh token (not yet
-                # written): paged part + correction term
-                o_paged = pa_ops.paged_attention(
-                    q[:, 0], k_arena[li], v_arena[li],
-                    block_tables, lengths, use_pallas=use_pallas,
-                    sm_scale=hd ** -0.5, interpret=True)
-                # include self-attention to the current token via the
-                # streaming softmax merge
-                o = _merge_self_token(q[:, 0], k[:, 0], v[:, 0], o_paged,
-                                      k_arena[li], v_arena[li],
-                                      block_tables, lengths, hd)
-                out = jnp.einsum("bshk,hkd->bsd", o[:, None], cast(sp["attn"]["wo"]))
-            else:
-                from repro.models.layers import mlp
-                out = mlp(sp["mlp"], h, cfg.activation)
-            x = x + out
+            x, kv = _decode_layer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, k_arena[li], v_arena[li], attend)
+            if kv is not None:
+                k_news.append(kv[0][None])   # (1, b, kvh, hd)
+                v_news.append(kv[1][None])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_out(params["embed"], x, cfg)
     k_new = jnp.concatenate(k_news, axis=0)[:, :, None]   # (L, b, 1, kvh, hd)
     v_new = jnp.concatenate(v_news, axis=0)[:, :, None]
     return logits, k_new, v_new
-
-
-def _merge_self_token(q, k_self, v_self, o_paged, k_arena, v_arena, bt, lens, hd):
-    """Numerically merge paged attention (history) with the current
-    token's self-attention using log-sum-exp streaming combination."""
-    b, h, d = q.shape
-    kvh = k_self.shape[1]
-    g = h // kvh
-    scale = hd ** -0.5
-    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
-    # history lse: recompute from arena (small b on host engine)
-    khist = k_arena[bt]                                  # (b, P, ps, kvh, hd)
-    vhist = v_arena[bt]
-    P, ps = khist.shape[1], khist.shape[2]
-    khist = khist.reshape(b, P * ps, kvh, d)
-    s_hist = jnp.einsum("bkgd,bskd->bkgs", qg, khist.astype(jnp.float32)) * scale
-    pos = jnp.arange(P * ps)[None, None, None, :]
-    s_hist = jnp.where(pos < lens[:, None, None, None], s_hist, -1e30)
-    m_hist = jnp.max(s_hist, axis=-1)
-    l_hist = jnp.sum(jnp.exp(s_hist - m_hist[..., None]), axis=-1)
-    s_self = jnp.einsum("bkgd,bkd->bkg", qg,
-                        k_self.astype(jnp.float32)) * scale
-    m_new = jnp.maximum(m_hist, s_self)
-    l_new = l_hist * jnp.exp(m_hist - m_new) + jnp.exp(s_self - m_new)
-    w_hist = (l_hist * jnp.exp(m_hist - m_new) / l_new)
-    w_self = (jnp.exp(s_self - m_new) / l_new)
-    o = (o_paged.reshape(b, kvh, g, d).astype(jnp.float32) * w_hist[..., None]
-         + v_self.astype(jnp.float32)[:, :, None, :] * w_self[..., None])
-    return o.reshape(b, h, d).astype(o_paged.dtype)

@@ -26,6 +26,11 @@ number of kernel dispatches regardless of ``num_layers`` or batch size.
 Batched copies read all sources from the pre-flush arena state (each
 RowClone in a batch is independent); destination pages are always
 freshly allocated, so no chaining can occur within a flush.
+
+The engine's fused decode round is the one exception to queue routing:
+its KV scatter runs *inside* the jitted step on donated arenas, and the
+cache adopts the results via :meth:`PagedKVCache.commit_fused_round`
+(which still records the dispatch in the queue's launch counters).
 """
 
 from __future__ import annotations
@@ -216,7 +221,34 @@ class PagedKVCache:
             self._release_page(p)
         self.flush_pending()
 
-    def block_table(self, seq_ids: List[int], max_pages: int) -> Tuple[jax.Array, jax.Array]:
+    def commit_fused_round(self, seq_ids: List[int], k_arena: jax.Array,
+                           v_arena: jax.Array) -> None:
+        """Adopt arenas mutated *inside* the engine's fused decode step
+        (the round's KV scatter runs in-jit on donated buffers, so there
+        is no separate ``kv_write`` flush) and advance each sequence by
+        the token just written.  Tails must have been reserved with
+        ``ensure_writable_tail`` before the step ran.  The single fused
+        dispatch is recorded in the queue's launch counters so per-round
+        dispatch accounting keeps one source of truth."""
+        self.k_arena = k_arena
+        self.v_arena = v_arena
+        for sid in seq_ids:
+            self.seqs[sid].length += 1
+        self.queue.count_external("fused_decode")
+
+    def block_table(self, seq_ids: List[int],
+                    max_pages: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+        """Block tables + lengths for ``seq_ids``.
+
+        Bucketing contract: the table width is ``max_pages`` rounded up
+        to the next power of two (computed from the widest sequence when
+        not given), so growing sequences hit a new jit trace only at
+        power-of-two page-count boundaries instead of every round.
+        Padding columns point at page 0 and are never attended — the
+        kernels mask all positions at or beyond ``lengths[b]``."""
+        if max_pages is None:
+            max_pages = max(len(self.seqs[sid].pages) for sid in seq_ids)
+        max_pages = _bucket_pow2(max_pages)
         bt = np.zeros((len(seq_ids), max_pages), np.int32)
         lens = np.zeros((len(seq_ids),), np.int32)
         for i, sid in enumerate(seq_ids):
@@ -228,6 +260,12 @@ class PagedKVCache:
     @property
     def pages_in_use(self) -> int:
         return len(self.refcount)
+
+
+def _bucket_pow2(n: int) -> int:
+    """Round up to the next power of two (min 1) — the block-table width
+    bucket that keeps jitted decode retraces logarithmic in growth."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def _num_attn_layers(cfg: ModelConfig) -> int:

@@ -15,6 +15,15 @@ batched ops are one ``register_kind`` call plus their executor (the
 software twin of the paper's "60 additional lines of Verilog"
 extensibility argument).
 
+``flush`` takes a variable number of arenas: the paged KV cache flushes
+its (k, v) pair, while :class:`repro.core.pimolib.TpuLib` flushes its
+single training-side buffer through the same queue — both get per-kind
+coalescing and unified launch accounting.  Work dispatched *outside* the
+queue but belonging to the same accounting (the engine's fused decode
+step, one jit call covering forward + scatter) is recorded with
+:meth:`PimOpQueue.count_external` so per-round dispatch counts have one
+source of truth.
+
 Flush ordering is fixed and documented: ``page_copy`` ops land first
 (CoW source pages must be duplicated before anything overwrites them),
 then ``page_init`` (zeroing freed pages), then ``kv_write`` (fresh
@@ -33,9 +42,9 @@ import numpy as np
 
 from repro.kernels.rowclone import ops as rc_ops
 
-# A flush executor: (queue, k_arena, v_arena, ops) -> (k_arena, v_arena).
-FlushFn = Callable[["PimOpQueue", jax.Array, jax.Array, list],
-                   Tuple[jax.Array, jax.Array]]
+# A flush executor: (queue, arenas, ops) -> arenas (same length tuple).
+FlushFn = Callable[["PimOpQueue", Tuple[jax.Array, ...], list],
+                   Tuple[jax.Array, ...]]
 
 
 @dataclass
@@ -96,8 +105,8 @@ class PimOpQueue:
     def enqueue_copy(self, src_page: int, dst_page: int) -> None:
         self.enqueue("page_copy", (src_page, dst_page))
 
-    def enqueue_init(self, page: int) -> None:
-        self.enqueue("page_init", page)
+    def enqueue_init(self, page: int, value: float = 0.0) -> None:
+        self.enqueue("page_init", (page, float(value)))
 
     def enqueue_kv_write(self, page: int, slot: int,
                          k: jax.Array, v: jax.Array) -> None:
@@ -127,16 +136,23 @@ class PimOpQueue:
         self.stats["launches"] += n
         self.launches_by_kind[kind] += n
 
-    def flush(self, k_arena: jax.Array,
-              v_arena: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def count_external(self, kind: str, n: int = 1) -> None:
+        """Account kernel dispatches issued outside the queue (e.g. the
+        engine's fused decode step) so launch counters stay the single
+        source of truth for per-round dispatch regressions."""
+        self.launches_by_kind.setdefault(kind, 0)
+        self._count_launch(kind, n)
+
+    def flush(self, *arenas: jax.Array) -> Tuple[jax.Array, ...]:
         """Drain the queue: one coalesced launch per op kind per arena.
 
-        Returns the updated arenas.  Launch count per flush is bounded by
-        ``2 * len(KIND_ORDER)`` no matter how many layers or sequences the
+        Returns the updated arenas (a tuple matching the input arity).
+        Launch count per flush is bounded by ``len(arenas) *
+        len(KIND_ORDER)`` no matter how many layers or sequences the
         pending ops span.
         """
         if self.pending_ops == 0:
-            return k_arena, v_arena
+            return arenas
         any_launch = False
         order = [k for k in self.KIND_ORDER if k in self._kinds]
         order += [k for k in self._kinds if k not in order]
@@ -145,14 +161,14 @@ class PimOpQueue:
             if not ops:
                 continue
             self._pending[kind] = []
-            k_arena, v_arena = self._kinds[kind](self, k_arena, v_arena, ops)
+            arenas = self._kinds[kind](self, arenas, ops)
             # logical ops, matching ops_enqueued (a KVWriteBatch record
             # carries .n token writes)
             self.stats["ops_coalesced"] += sum(getattr(o, "n", 1) for o in ops)
             any_launch = True
         if any_launch:
             self.stats["flushes"] += 1
-        return k_arena, v_arena
+        return arenas
 
 
 # ---------------------------------------------------------------------- #
@@ -160,28 +176,34 @@ class PimOpQueue:
 # ---------------------------------------------------------------------- #
 
 
-def _flush_page_copy(q: PimOpQueue, k_arena, v_arena, ops):
+def _flush_page_copy(q: PimOpQueue, arenas, ops):
     src = jnp.asarray([s for s, _ in ops], jnp.int32)
     dst = jnp.asarray([d for _, d in ops], jnp.int32)
-    k_arena = rc_ops.pim_page_copy_batched(k_arena, src, dst,
-                                           use_pallas=q.use_pallas)
-    v_arena = rc_ops.pim_page_copy_batched(v_arena, src, dst,
-                                           use_pallas=q.use_pallas)
-    q._count_launch("page_copy", 2)
-    return k_arena, v_arena
+    arenas = tuple(rc_ops.pim_page_copy_batched(a, src, dst,
+                                                use_pallas=q.use_pallas)
+                   for a in arenas)
+    q._count_launch("page_copy", len(arenas))
+    return arenas
 
 
-def _flush_page_init(q: PimOpQueue, k_arena, v_arena, ops):
-    dst = jnp.asarray(ops, jnp.int32)
-    k_arena = rc_ops.pim_page_init_batched(k_arena, dst, 0.0,
-                                           use_pallas=q.use_pallas)
-    v_arena = rc_ops.pim_page_init_batched(v_arena, dst, 0.0,
-                                           use_pallas=q.use_pallas)
-    q._count_launch("page_init", 2)
-    return k_arena, v_arena
+def _flush_page_init(q: PimOpQueue, arenas, ops):
+    # ops: (page, value) records; one launch per arena per distinct value
+    # (in practice a single 0.0 group — the calloc analogue)
+    by_value: Dict[float, List[int]] = {}
+    for page, value in ops:
+        by_value.setdefault(value, []).append(page)
+    for value, pages in by_value.items():
+        dst = jnp.asarray(pages, jnp.int32)
+        arenas = tuple(rc_ops.pim_page_init_batched(a, dst, value,
+                                                    use_pallas=q.use_pallas)
+                       for a in arenas)
+        q._count_launch("page_init", len(arenas))
+    return arenas
 
 
-def _flush_kv_write(q: PimOpQueue, k_arena, v_arena, ops: List[KVWriteBatch]):
+def _flush_kv_write(q: PimOpQueue, arenas, ops: List[KVWriteBatch]):
+    assert len(arenas) == 2, "kv_write flushes a (k, v) arena pair"
+    k_arena, v_arena = arenas
     pages = jnp.asarray([p for o in ops for p in o.pages], jnp.int32)
     slots = jnp.asarray([s for o in ops for s in o.slots], jnp.int32)
     if len(ops) == 1:              # the common case: already stacked
@@ -196,4 +218,4 @@ def _flush_kv_write(q: PimOpQueue, k_arena, v_arena, ops: List[KVWriteBatch]):
                                     v_new.astype(v_arena.dtype),
                                     use_pallas=q.use_pallas)
     q._count_launch("kv_write", 2)
-    return k_arena, v_arena
+    return (k_arena, v_arena)

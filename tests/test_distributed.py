@@ -127,6 +127,27 @@ class TestTpuPimolib:
         with pytest.raises(ValueError):
             lib.copy_pages(a, b)
 
+    def test_deferred_ops_coalesce_to_one_launch(self):
+        # TpuLib routes through the batched PiM op scheduler: deferred
+        # mode folds N copy_pages calls into ONE coalesced launch
+        from repro.core import make_tpu_arena, TpuLib, Blocking
+        arena = make_tpu_arena(num_slabs=2, pages_per_slab=8, page_elems=64,
+                               dtype=jnp.float32)
+        lib = TpuLib(arena, deferred=True)
+        pairs = [arena.allocator.alloc_copy_pair(1) for _ in range(3)]
+        for i, (src, _) in enumerate(pairs):
+            lib.write_pages(src, jnp.full((1, 64), float(i + 1)))
+        for src, dst in pairs:
+            lib.copy_pages(src, dst)
+        assert lib.queue.launches_by_kind["page_copy"] == 0  # still queued
+        assert lib.stats["copies"] == 3
+        lib.flush(Blocking.FIN)
+        assert lib.queue.launches_by_kind["page_copy"] == 1  # one launch
+        for i, (_, dst) in enumerate(pairs):
+            np.testing.assert_array_equal(
+                np.asarray(lib.read_pages(dst)),
+                np.full((1, 64), i + 1, np.float32))
+
 
 class TestDataPipeline:
     def test_deterministic_replay(self):

@@ -238,3 +238,65 @@ class TestPagedAttention:
         out = pa.paged_attention(q, ka, va, bt, lengths, interpret=True)
         expect = pa_ref.paged_attention(q, ka, va, bt, lengths)
         np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+
+class TestPagedAttentionFusion:
+    """The decode-fusion hooks: LSE-returning variant and the in-kernel
+    current-token (self) merge, vs the jnp oracle and a dense oracle."""
+
+    @staticmethod
+    def _setup(seed=0, b=3, kvh=2, g=2, ps=8, npages=4, d=32):
+        h = kvh * g
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+        total = npages * b + 1
+        ka = jnp.asarray(rng.normal(size=(total, ps, kvh, d)).astype(np.float32))
+        va = jnp.asarray(rng.normal(size=(total, ps, kvh, d)).astype(np.float32))
+        bt = jnp.asarray(rng.permutation(npages * b).reshape(b, npages).astype(np.int32))
+        lens = jnp.asarray(rng.integers(1, npages * ps, b).astype(np.int32))
+        ks = jnp.asarray(rng.normal(size=(b, kvh, d)).astype(np.float32))
+        vs = jnp.asarray(rng.normal(size=(b, kvh, d)).astype(np.float32))
+        return q, ka, va, bt, lens, ks, vs
+
+    def test_lse_variant_matches_ref(self):
+        for seed in range(3):
+            q, ka, va, bt, lens, _, _ = self._setup(seed)
+            o1, m1, l1 = pa.paged_attention(q, ka, va, bt, lens,
+                                            interpret=True, return_lse=True)
+            o2, m2, l2 = pa_ref.paged_attention(q, ka, va, bt, lens,
+                                                return_lse=True)
+            np.testing.assert_allclose(o1, o2, rtol=3e-5, atol=3e-5)
+            np.testing.assert_allclose(m1, m2, rtol=3e-5, atol=3e-5)
+            np.testing.assert_allclose(l1, l2, rtol=3e-5, atol=3e-5)
+
+    def test_self_token_merge_matches_ref(self):
+        for seed in range(3):
+            q, ka, va, bt, lens, ks, vs = self._setup(seed)
+            out = pa.paged_attention(q, ka, va, bt, lens, interpret=True,
+                                     k_self=ks, v_self=vs)
+            expect = pa_ref.paged_attention(q, ka, va, bt, lens,
+                                            k_self=ks, v_self=vs)
+            np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+    def test_self_token_merge_matches_dense_oracle(self):
+        # independent oracle: gather history + append self token, then a
+        # plain (non-streaming) softmax per sequence
+        b, kvh, g, d = 2, 2, 2, 32
+        h = kvh * g
+        q, ka, va, bt, lens, ks, vs = self._setup(7, b=b, kvh=kvh, g=g, d=d)
+        out = np.asarray(pa.paged_attention(q, ka, va, bt, lens,
+                                            interpret=True,
+                                            k_self=ks, v_self=vs))
+        scale = d ** -0.5
+        for i in range(b):
+            L = int(lens[i])
+            kk = np.asarray(ka[bt[i]]).reshape(-1, kvh, d)[:L]
+            vv = np.asarray(va[bt[i]]).reshape(-1, kvh, d)[:L]
+            kk = np.concatenate([kk, np.asarray(ks[i])[None]], 0)
+            vv = np.concatenate([vv, np.asarray(vs[i])[None]], 0)
+            qi = np.asarray(q[i]).reshape(kvh, g, d)
+            s = np.einsum("kgd,skd->kgs", qi, kk) * scale
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            oo = np.einsum("kgs,skd->kgd", p, vv).reshape(h, d)
+            np.testing.assert_allclose(out[i], oo, rtol=3e-5, atol=3e-5)
