@@ -60,8 +60,14 @@ def _decode_throughput(cfg, params, rng, *, fused: bool, n_reqs: int,
         eng._prefill(eng.queue.pop(0))
     probe_rounds = 2
     base_launch = eng.cache.queue.stats["launches"]
+    launches_by_kind = []        # per-round API-level dispatch accounting
     for _ in range(probe_rounds):
+        before = dict(eng.cache.queue.launches_by_kind)
         eng._decode_round()
+        after = eng.cache.queue.launches_by_kind
+        launches_by_kind.append(
+            {k: after[k] - before.get(k, 0) for k in after
+             if after[k] - before.get(k, 0)})
     dispatches = (eng.cache.queue.stats["launches"] - base_launch) / probe_rounds
     base_tok = eng.stats["tokens_out"]
     t0 = time.perf_counter()
@@ -72,6 +78,7 @@ def _decode_throughput(cfg, params, rng, *, fused: bool, n_reqs: int,
         "tok_s": decoded / dt if dt > 0 else float("inf"),
         "decoded_tokens": decoded,
         "dispatches_per_round": dispatches,
+        "launches_by_kind_per_round": launches_by_kind,
         "jit_traces": eng.stats["jit_traces"],
     }
 
@@ -137,6 +144,10 @@ def main(out=sys.stdout, smoke: bool = False):
         "decode_fusion_speedup": round(speedup, 2),
         "dispatches_per_round_fused": fstats["dispatches_per_round"],
         "dispatches_per_round_eager": estats["dispatches_per_round"],
+        # opcode-level dispatch accounting per probed round (pimolib v2:
+        # PimOpQueue.launches_by_kind is the one source of truth)
+        "launches_by_kind_per_round_fused": fstats["launches_by_kind_per_round"],
+        "launches_by_kind_per_round_eager": estats["launches_by_kind_per_round"],
         "jit_traces_fused": fstats["jit_traces"],
         "decoded_tokens": fstats["decoded_tokens"],
     }

@@ -4,7 +4,11 @@
 2. Discover subarrays empirically (the paper's §4.2 methodology).
 3. Allocate RowClone-compatible operands and copy/init in-memory.
 4. Generate true random numbers with D-RaNGe.
-5. Run the same pimolib ops on the TPU-face (JAX arena + kernels).
+5. Run the *same* pimolib v2 protocol on the JAX face (HBM arena +
+   Pallas kernels) — one `PimLib` API, two substrates, unified
+   `OpReceipt` accounting.
+6. Record a serving-style trace on the JAX face and replay it on the
+   model face for paper-style RowClone-vs-CPU latency totals.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,9 +17,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (Blocking, DRAMGeometry, DRangeTRNG, DeviceLib,
-                        EndToEndCosts, MemoryController, PimOpsController,
-                        SimulatedDRAM, TpuLib, allocator_from_subarray_map,
-                        characterize, discover_subarrays, make_tpu_arena)
+                        EndToEndCosts, MemoryController, Opcode,
+                        PimOpsController, SimulatedDRAM, TpuLib,
+                        allocator_from_subarray_map, characterize,
+                        discover_subarrays, make_tpu_arena)
 
 
 def main():
@@ -32,15 +37,15 @@ def main():
     print(f"discovered {smap.num_groups} subarray groups "
           f"in {smap.trials} RowClone trials")
 
-    # -- 3. in-DRAM copy & init ------------------------------------------
+    # -- 3. in-DRAM copy & init (model face of the PimLib protocol) ------
     alloc = allocator_from_subarray_map(smap)
     lib = DeviceLib(PimOpsController(mc), alloc)
     src, dst = alloc.alloc_copy_pair(1, tag="demo")
     payload = np.random.default_rng(0).integers(
-        0, 256, dev.geometry.row_bytes, dtype=np.uint8)
-    dev.write_row(src.rows[0], payload)
+        0, 256, (1, dev.geometry.row_bytes), dtype=np.uint8)
+    lib.write(src, payload)
     rec = lib.copy(src, dst, blocking=Blocking.FIN)
-    assert (dev.read_row(dst.rows[0]) == payload).all()
+    assert (lib.read(dst) == payload).all()
     print(f"RowClone-Copy: ok={rec.ok}  latency={rec.latency_ns:.0f} ns "
           f"(memcpy would be {lib.cpu_copy(src, dst).latency_ns:.0f} ns)")
     rec = lib.init(dst)
@@ -48,24 +53,53 @@ def main():
 
     # -- 4. D-RaNGe -------------------------------------------------------
     cmap = characterize(mc, rows=list(range(32)), n_bits=1024, samples=60)
-    trng = DRangeTRNG(lib.poc, cmap)
-    bits, rec = lib.rand_dram(64, trng)
+    lib.attach_trng(DRangeTRNG(lib.poc, cmap))
+    print("supports(DR_GEN) after characterization:",
+          lib.supports(Opcode.DR_GEN))
+    bits, rec = lib.rand(64)
     print(f"D-RaNGe: 64 true-random bits in {rec.latency_ns:.0f} ns "
           f"(ones fraction {bits.mean():.2f})")
 
-    # -- 5. TPU face ------------------------------------------------------
-    print("\n== TPU face (JAX arena + Pallas-backed pimolib) ==")
+    # -- 5. JAX face: the SAME protocol over an HBM arena -----------------
+    print("\n== JAX face (HBM arena + Pallas-backed pimolib) ==")
     arena = make_tpu_arena(num_slabs=2, pages_per_slab=8, page_elems=128,
                            dtype=jnp.float32)
     tlib = TpuLib(arena)
     s, d = arena.allocator.alloc_copy_pair(2)
-    tlib.write_pages(s, jnp.arange(2 * 128, dtype=jnp.float32).reshape(2, 128))
-    tlib.copy_pages(s, d, blocking=Blocking.FIN)
-    print("pim_page_copy ok:",
-          bool((tlib.read_pages(d) == tlib.read_pages(s)).all()))
-    r = tlib.rand(jnp.asarray([1, 2], jnp.uint32), 2, 4)
-    print("pim_rand (D-RaNGe kernel):", np.asarray(r)[0])
-    print("stats:", tlib.stats)
+    tlib.write(s, jnp.arange(2 * 128, dtype=jnp.float32).reshape(2, 128))
+    rec = tlib.copy(s, d, blocking=Blocking.FIN)
+    print(f"pim_page_copy: ok={rec.ok}  op={rec.op}  "
+          f"launches={rec.launches} (coalesced)")
+    print("contents match:", bool((tlib.read(d) == tlib.read(s)).all()))
+    bits, rec = tlib.rand(64, seed=jnp.asarray([1, 2], jnp.uint32))
+    print(f"pim_rand (D-RaNGe kernel): ones fraction {bits.mean():.2f}, "
+          f"launches={rec.launches}")
+    print("stats:", tlib.stats, "| queue:", tlib.queue.stats)
+
+    # -- 6. serving trace, replayed on the model face ---------------------
+    print("\n== serving trace -> model-face replay (RowClone vs CPU) ==")
+    from repro.configs import ARCHS, reduced
+    from repro.serving.kv_cache import PagedKVCache
+    from repro.serving.trace import replay_on_device
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    cache = PagedKVCache(cfg, num_pages=16, page_size=4, num_slabs=2,
+                         record_trace=True)
+    seq = cache.create(0, 10)
+    k = jnp.ones((cache.n_layers, 10, cfg.num_kv_heads,
+                  cfg.resolved_head_dim))
+    cache.write_prompt_kv(seq, k, k)     # bulk prompt KV (one launch/arena)
+    cache.fork(0, 1)                     # CoW fork: RowClone page copy
+    cache.free(0)
+    cache.free(1)                        # init-on-free: RowClone init
+    rep = replay_on_device(cache.trace)
+    print("trace ops:", rep["counts"])
+    print(f"pim total:  {rep['pim_ns']['total']:.0f} ns  "
+          f"(rowclone_copy {rep['pim_ns']['rowclone_copy']:.0f}, "
+          f"rowclone_init {rep['pim_ns']['rowclone_init']:.0f})")
+    print(f"cpu total:  {rep['cpu_ns']['total']:.0f} ns")
+    print("end-to-end speedup: "
+          f"{rep['speedup']['end_to_end']:.2f}x "
+          f"(init {rep['speedup']['init']:.1f}x)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
 """PiDRAM core: the paper's contribution as a composable layer.
 
+pimolib v2: one :class:`PimLib` protocol (copy/init/rand/read/write/
+flush, unified :class:`OpReceipt`) over two faces, backed by the
+opcode-keyed op registry (:mod:`repro.core.op_registry`) and the
+batched PiM op scheduler (:mod:`repro.core.pim_queue`).
+
 Faithful-reproduction substrate (simulated DDR3 prototype):
   timing, dram_model, memctrl, subarray, allocator, coherence, isa, poc,
   drange, pimolib.DeviceLib
@@ -16,8 +21,11 @@ from .dram_model import CellPhysics, DRAMGeometry, SimulatedDRAM
 from .drange import DRangeTRNG, characterize
 from .isa import Instruction, Opcode
 from .memctrl import EndToEndCosts, MemoryController
-from .pimolib import (Blocking, DeviceLib, OpReceipt, TpuArena, TpuLib,
-                      make_tpu_arena)
+from .op_registry import (FACE_DEVICE, FACE_JAX, KVWriteBatch, PimOpSpec,
+                          get_op, ops_for_face, register_pim_op)
+from .pim_queue import PimOpQueue
+from .pimolib import (Blocking, DeviceLib, OpReceipt, PimLib, TpuArena,
+                      TpuLib, make_tpu_arena)
 from .poc import PimOpsController
 from .subarray import SubarrayMap, discover_subarrays
 from .timing import (DDR3Timings, PrototypeParams, ViolatedTimings,

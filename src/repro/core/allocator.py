@@ -184,6 +184,9 @@ class SubarrayAllocator:
     def num_groups(self) -> int:
         return len(self._groups)
 
+    def group_ids(self) -> List[int]:
+        return sorted(self._groups)
+
 
 def allocator_from_subarray_map(smap) -> SubarrayAllocator:
     """Build an allocator from a discovered :class:`SubarrayMap`."""

@@ -22,6 +22,10 @@ class Opcode(enum.IntEnum):
     DR_GEN = 0x03       # D-RaNGe: operand0=row, operand1=n_bits
     BULK_COPY = 0x04    # multi-row copy: operands are base rows (count via imm)
     READ_BUF = 0x05     # drain random-number buffer into data register
+    KV_WRITE = 0x06     # slot-granular KV scatter: JAX-face only (no DDR3
+                        # command sequence exists for it; the model face
+                        # reports it unsupported and callers fall back to
+                        # the CPU write path)
 
 
 _OP_BITS = 28

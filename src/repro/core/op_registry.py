@@ -1,0 +1,230 @@
+"""Opcode-keyed PiM op registry — pimolib v2's single extension point.
+
+Every PiM operation the framework knows is one :class:`PimOpSpec` keyed
+by its :class:`repro.core.isa.Opcode`, carrying per-face executors:
+
+* **model face** (``"device"``): ``device_seq`` names the
+  :class:`repro.core.memctrl.MemoryController` command sequence the POC
+  runs when it decodes this opcode, and ``device_insns`` builds the
+  :class:`Instruction` list a :class:`repro.core.pimolib.DeviceLib` call
+  stages in the POC instruction buffer.  ``poc_post`` (optional) runs on
+  the POC after the sequence (e.g. D-RaNGe deposits generated bits into
+  the random-number buffer).
+
+* **JAX face** (``"jax"``): ``jax_kind`` + ``jax_flush`` register a
+  deferred op kind on every :class:`repro.core.pim_queue.PimOpQueue`,
+  flushed as one coalesced Pallas/XLA launch per kind.
+
+Registering a new PiM op is ONE :func:`register_pim_op` call plus its
+executors on whichever faces support it — the software mirror of the
+paper's "60 additional lines of Verilog" extensibility argument.  Faces
+a spec does not implement are visible through :func:`supports`, so
+callers degrade gracefully (``KV_WRITE`` has no DDR3 command sequence;
+the model face accounts it as a CPU write instead).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rowclone import ops as rc_ops
+
+from .isa import Instruction, Opcode
+
+FACE_DEVICE = "device"
+FACE_JAX = "jax"
+
+
+@dataclass(frozen=True)
+class PimOpSpec:
+    """One PiM op: opcode + per-face executors (None = face unsupported)."""
+
+    opcode: Opcode
+    name: str                                  # OpReceipt.op on every face
+    device_seq: Optional[str] = None           # MemoryController sequence
+    device_insns: Optional[Callable] = None    # (lib, *operands) -> [Instruction]
+    poc_post: Optional[Callable] = None        # (poc, SequenceResult) -> None
+    jax_kind: Optional[str] = None             # PimOpQueue kind name
+    jax_flush: Optional[Callable] = None       # FlushFn (see pim_queue)
+    jax_direct: bool = False                   # JAX-face op dispatched directly
+                                               # (own kernel, no queue kind) —
+                                               # e.g. D-RaNGe generation
+
+    def supports(self, face: str) -> bool:
+        if face == FACE_DEVICE:
+            return self.device_seq is not None
+        if face == FACE_JAX:
+            return self.jax_kind is not None or self.jax_direct
+        raise ValueError(f"unknown face {face!r}")
+
+
+_REGISTRY: Dict[Opcode, PimOpSpec] = {}
+
+
+def register_pim_op(spec: PimOpSpec, *, override: bool = False) -> PimOpSpec:
+    if spec.opcode in _REGISTRY and not override:
+        raise ValueError(f"opcode {spec.opcode!r} already registered "
+                         f"as {_REGISTRY[spec.opcode].name!r}")
+    if (spec.jax_kind is None) != (spec.jax_flush is None):
+        raise ValueError("jax_kind and jax_flush must be given together")
+    _REGISTRY[spec.opcode] = spec
+    return spec
+
+
+def get_op(opcode: Opcode) -> Optional[PimOpSpec]:
+    return _REGISTRY.get(opcode)
+
+
+def ops_for_face(face: str) -> List[PimOpSpec]:
+    return [s for s in _REGISTRY.values() if s.supports(face)]
+
+
+def supports(opcode: Opcode, face: str) -> bool:
+    spec = _REGISTRY.get(opcode)
+    return spec is not None and spec.supports(face)
+
+
+def queue_kinds() -> List[Tuple[str, Callable]]:
+    """(kind, flush_fn) pairs every new PimOpQueue registers at birth,
+    in registry insertion order."""
+    return [(s.jax_kind, s.jax_flush) for s in _REGISTRY.values()
+            if s.jax_kind is not None]
+
+
+# ---------------------------------------------------------------------- #
+# Model-face executors: Instruction builders + POC post hooks
+# ---------------------------------------------------------------------- #
+
+
+def _insns_rc_copy(lib, src, dst) -> List[Instruction]:
+    return [Instruction(Opcode.RC_COPY, s, d)
+            for s, d in zip(src.rows, dst.rows)]
+
+
+def _insns_bulk_copy(lib, src, dst) -> List[Instruction]:
+    return [Instruction(Opcode.BULK_COPY, s, d)
+            for s, d in zip(src.rows, dst.rows)]
+
+
+def _insns_rc_init(lib, src, dst) -> List[Instruction]:
+    # src is unused: RowClone-Init copies the reserved all-zeros row of
+    # the destination's subarray over each destination row.
+    zero = lib.reserve_zero_row(dst.group)
+    return [Instruction(Opcode.RC_INIT, zero, d) for d in dst.rows]
+
+
+def _poc_deposit_rng(poc, res) -> None:
+    """D-RaNGe post hook: sampled bits land in the POC RNG buffer."""
+    if res.data is not None:
+        for b in res.data:
+            poc.rng_buffer.append(int(b))
+
+
+# ---------------------------------------------------------------------- #
+# JAX-face executors: PimOpQueue flush functions (one coalesced launch
+# per kind per arena).  ``q`` is the flushing PimOpQueue (duck-typed:
+# only ``use_pallas`` and ``_count_launch`` are touched).
+# ---------------------------------------------------------------------- #
+
+
+@dataclass
+class KVWriteBatch:
+    """Pending slot writes: full-depth K/V for a batch of tokens,
+    kept stacked as (layers, batch, ...) so enqueue/flush do O(1) host
+    work in the batch size (no per-token slicing or re-stacking)."""
+
+    pages: List[int]
+    slots: List[int]
+    k: jax.Array      # (layers, batch, kvh, hd)
+    v: jax.Array
+
+    @property
+    def n(self) -> int:
+        return len(self.pages)
+
+
+def _flush_page_copy(q, arenas, ops):
+    src = jnp.asarray([s for s, _ in ops], jnp.int32)
+    dst = jnp.asarray([d for _, d in ops], jnp.int32)
+    arenas = tuple(rc_ops.pim_page_copy_batched(a, src, dst,
+                                                use_pallas=q.use_pallas)
+                   for a in arenas)
+    q._count_launch("page_copy", len(arenas))
+    return arenas
+
+
+def group_inits_by_value(ops) -> Dict[float, List[int]]:
+    """(page, value) records -> {value: pages}: the one-launch-per-
+    distinct-fill-value contract, shared by the flush executor and the
+    trace recorder so recorded events always match actual launches."""
+    by_value: Dict[float, List[int]] = {}
+    for page, value in ops:
+        by_value.setdefault(value, []).append(page)
+    return by_value
+
+
+def _flush_page_init(q, arenas, ops):
+    # one launch per arena per distinct value (in practice a single 0.0
+    # group — the calloc analogue)
+    for value, pages in group_inits_by_value(ops).items():
+        dst = jnp.asarray(pages, jnp.int32)
+        arenas = tuple(rc_ops.pim_page_init_batched(a, dst, value,
+                                                    use_pallas=q.use_pallas)
+                       for a in arenas)
+        q._count_launch("page_init", len(arenas))
+    return arenas
+
+
+def _flush_kv_write(q, arenas, ops: List[KVWriteBatch]):
+    assert len(arenas) == 2, "kv_write flushes a (k, v) arena pair"
+    k_arena, v_arena = arenas
+    pages = jnp.asarray([p for o in ops for p in o.pages], jnp.int32)
+    slots = jnp.asarray([s for o in ops for s in o.slots], jnp.int32)
+    if len(ops) == 1:              # the common case: already stacked
+        k_new, v_new = ops[0].k, ops[0].v
+    else:
+        k_new = jnp.concatenate([o.k for o in ops], axis=1)  # (L, B, ...)
+        v_new = jnp.concatenate([o.v for o in ops], axis=1)
+    k_arena = rc_ops.pim_kv_scatter(k_arena, pages, slots,
+                                    k_new.astype(k_arena.dtype),
+                                    use_pallas=q.use_pallas)
+    v_arena = rc_ops.pim_kv_scatter(v_arena, pages, slots,
+                                    v_new.astype(v_arena.dtype),
+                                    use_pallas=q.use_pallas)
+    q._count_launch("kv_write", 2)
+    return (k_arena, v_arena)
+
+
+# ---------------------------------------------------------------------- #
+# Built-in ops (the paper's case studies + the serving KV scatter)
+# ---------------------------------------------------------------------- #
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.RC_COPY, name="rowclone_copy",
+    device_seq="rowclone_copy", device_insns=_insns_rc_copy,
+    jax_kind="page_copy", jax_flush=_flush_page_copy))
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.RC_INIT, name="rowclone_init",
+    device_seq="rowclone_copy", device_insns=_insns_rc_init,
+    jax_kind="page_init", jax_flush=_flush_page_init))
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.BULK_COPY, name="rowclone_bulk_copy",
+    device_seq="rowclone_copy", device_insns=_insns_bulk_copy))
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.DR_GEN, name="drange_rand",
+    device_seq="drange_read", poc_post=_poc_deposit_rng,
+    jax_direct=True))   # TpuLib.rand dispatches the D-RaNGe kernel itself
+
+# JAX-face only: slot-granular KV scatter has no violated-timing DDR3
+# sequence — the model face reports it unsupported (graceful fallback to
+# the CPU write path, see serving.trace.replay_on_device).
+register_pim_op(PimOpSpec(
+    opcode=Opcode.KV_WRITE, name="kv_write",
+    jax_kind="kv_write", jax_flush=_flush_kv_write))

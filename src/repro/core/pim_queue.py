@@ -1,0 +1,206 @@
+"""Batched PiM operation scheduler: the deferred op queue.
+
+PiDRAM's end-to-end lesson is that in-DRAM ops only win when the dispatch
+path is amortized: one POC handshake per *batch* of row operations, not
+per row.  The serving analogue: every CoW fork, page free, and
+decode-round KV write used to issue ``O(num_layers)`` separate kernel
+launches from Python.  This queue collects those arena mutations as
+lightweight op records and flushes them as ONE coalesced launch per op
+kind per arena — a constant number of dispatches regardless of layer
+count or active-batch size.
+
+Op kinds come from the opcode-keyed registry
+(:mod:`repro.core.op_registry`): every spec with a JAX face contributes
+its ``(jax_kind, jax_flush)`` pair at queue construction, so a new PiM
+op is one ``register_pim_op`` call — the software twin of the paper's
+"60 additional lines of Verilog" extensibility argument.  Ad-hoc kinds
+can still be registered per-queue with :meth:`PimOpQueue.register_kind`.
+
+``flush`` takes a variable number of arenas: the paged KV cache flushes
+its (k, v) pair, while :class:`repro.core.pimolib.TpuLib` flushes its
+buffer list through the same queue — both get per-kind coalescing and
+unified launch accounting.  Work dispatched *outside* the queue but
+belonging to the same accounting (the engine's fused decode step, one
+jit call covering forward + scatter) is recorded with
+:meth:`PimOpQueue.count_external` so per-round dispatch counts have one
+source of truth.
+
+Flush ordering is fixed and documented: ``page_copy`` ops land first
+(CoW source pages must be duplicated before anything overwrites them),
+then ``page_init`` (zeroing freed pages), then ``kv_write`` (fresh
+token KV).  Within a kind, op order follows enqueue order; duplicate
+destinations resolve to the last enqueued op.
+
+Deferred clients that coalesce across calls use :meth:`admit` for
+hazard-aware admission: because the queue replays by *kind*, enqueueing
+an op that mixes kinds with the backlog, or that touches a row a
+pending op already touched, would break program order — ``admit``
+flushes the backlog first in exactly those cases, so the common bulk
+case (many same-kind ops on disjoint rows) still coalesces to one
+launch per kind.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import op_registry
+from .op_registry import KVWriteBatch
+
+# A flush executor: (queue, arenas, ops) -> arenas (same length tuple).
+FlushFn = Callable[["PimOpQueue", Tuple[jax.Array, ...], list],
+                   Tuple[jax.Array, ...]]
+
+
+class PimOpQueue:
+    """Deferred queue of arena mutations, flushed as coalesced launches."""
+
+    KIND_ORDER = ("page_copy", "page_init", "kv_write")
+
+    def __init__(self, *, use_pallas: bool = False) -> None:
+        self.use_pallas = use_pallas
+        self._kinds: Dict[str, FlushFn] = {}
+        self._pending: Dict[str, list] = {}
+        self.stats = {
+            "launches": 0,            # kernel dispatches issued (total)
+            "flushes": 0,             # flush() calls that launched anything
+            "ops_enqueued": 0,        # logical ops collected
+            "ops_coalesced": 0,       # logical ops folded into launches
+            "hazard_flushes": 0,      # admit() flushes forced by hazards
+        }
+        self.launches_by_kind: Dict[str, int] = {}
+        # optional PimTrace sink (duck-typed: record_from_queue(kind, ops))
+        self.trace = None
+        # at most one lib drives a queue: pending ops carry no owner, so
+        # two libs flushing one queue would land each other's ops on the
+        # wrong arenas (TpuLib claims this at construction)
+        self.owner = None
+        # hazard tracking for deferred clients (see admit())
+        self._hazard_rows: Set[int] = set()
+        self._hazard_kind: Optional[str] = None
+        for kind, fn in op_registry.queue_kinds():
+            self.register_kind(kind, fn)
+
+    # -- extension registry (fed by repro.core.op_registry) -------------- #
+
+    def register_kind(self, kind: str, fn: FlushFn) -> None:
+        self._kinds[kind] = fn
+        self._pending.setdefault(kind, [])
+        self.launches_by_kind.setdefault(kind, 0)
+
+    def has_kind(self, kind: str) -> bool:
+        return kind in self._kinds
+
+    # -- enqueue -------------------------------------------------------- #
+
+    def enqueue(self, kind: str, op, n_ops: int = 1) -> None:
+        if kind not in self._kinds:
+            raise KeyError(f"unknown PiM op kind {kind!r}")
+        self._pending[kind].append(op)
+        self.stats["ops_enqueued"] += n_ops
+
+    def enqueue_copy(self, src_page: int, dst_page: int) -> None:
+        self.enqueue("page_copy", (src_page, dst_page))
+
+    def enqueue_init(self, page: int, value: float = 0.0) -> None:
+        self.enqueue("page_init", (page, float(value)))
+
+    def enqueue_kv_write(self, page: int, slot: int,
+                         k: jax.Array, v: jax.Array) -> None:
+        """Single token: k/v (layers, ...)."""
+        self.enqueue_kv_writes([page], [slot],
+                               jnp.asarray(k)[:, None], jnp.asarray(v)[:, None])
+
+    def enqueue_kv_writes(self, pages, slots, k: jax.Array,
+                          v: jax.Array) -> None:
+        """Bulk form: pages/slots length-B, k/v (layers, B, ...) — stored
+        stacked; no per-token host work.  An empty batch (e.g. a prompt
+        fully covered by a shared prefix) enqueues nothing, so the
+        launch counters only ever count real dispatches."""
+        if len(pages) == 0:
+            return
+        batch = KVWriteBatch([int(p) for p in pages], [int(s) for s in slots],
+                             k, v)
+        self.enqueue("kv_write", batch, n_ops=batch.n)
+
+    # -- hazard-aware deferred admission --------------------------------- #
+
+    def admit(self, kind: str, rows: Iterable[int],
+              flush: Callable[[], None], *,
+              reads: Iterable[int] = ()) -> bool:
+        """Admit ops of ``kind`` writing ``rows`` (and reading ``reads``)
+        for deferred enqueue.
+
+        The queue replays by kind (copies before inits before writes),
+        so coalescing across a kind change, or touching a row a pending
+        op already *wrote*, would break program order.  Reading a row
+        other pending ops also read is safe (batched copies read the
+        pre-flush arena state), so fan-out copies from one source still
+        coalesce.  ``admit`` calls ``flush`` (the owning face's flush,
+        which drains this queue against its arenas) exactly when a
+        hazard exists, records the admitted write rows, and returns
+        whether it flushed.  Flushing the queue clears the record.
+        """
+        rows = list(rows)
+        flushed = False
+        if self.pending_ops and (
+                self._hazard_kind != kind
+                or not self._hazard_rows.isdisjoint(rows)
+                or not self._hazard_rows.isdisjoint(reads)):
+            flush()
+            flushed = True
+            self.stats["hazard_flushes"] += 1
+        self._hazard_kind = kind
+        self._hazard_rows.update(rows)
+        return flushed
+
+    # -- flush ---------------------------------------------------------- #
+
+    @property
+    def pending_ops(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def _count_launch(self, kind: str, n: int = 1) -> None:
+        self.stats["launches"] += n
+        self.launches_by_kind[kind] += n
+
+    def count_external(self, kind: str, n: int = 1) -> None:
+        """Account kernel dispatches issued outside the queue (e.g. the
+        engine's fused decode step) so launch counters stay the single
+        source of truth for per-round dispatch regressions."""
+        self.launches_by_kind.setdefault(kind, 0)
+        self._count_launch(kind, n)
+
+    def flush(self, *arenas: jax.Array) -> Tuple[jax.Array, ...]:
+        """Drain the queue: one coalesced launch per op kind per arena.
+
+        Returns the updated arenas (a tuple matching the input arity).
+        Launch count per flush is bounded by ``len(arenas) *
+        len(KIND_ORDER)`` no matter how many layers or sequences the
+        pending ops span.
+        """
+        self._hazard_rows.clear()
+        self._hazard_kind = None
+        if self.pending_ops == 0:
+            return arenas
+        any_launch = False
+        order = [k for k in self.KIND_ORDER if k in self._kinds]
+        order += [k for k in self._kinds if k not in order]
+        for kind in order:
+            ops = self._pending[kind]
+            if not ops:
+                continue
+            self._pending[kind] = []
+            if self.trace is not None:
+                self.trace.record_from_queue(kind, ops)
+            arenas = self._kinds[kind](self, arenas, ops)
+            # logical ops, matching ops_enqueued (a KVWriteBatch record
+            # carries .n token writes)
+            self.stats["ops_coalesced"] += sum(getattr(o, "n", 1) for o in ops)
+            any_launch = True
+        if any_launch:
+            self.stats["flushes"] += 1
+        return arenas

@@ -1,43 +1,121 @@
-"""pimolib — PiDRAM's extensible PiM operations library (component ③).
+"""pimolib v2 — PiDRAM's extensible PiM operations library (component ③).
 
-Two faces, one API:
+One protocol, two faces:
 
-* **Model face** (`DeviceLib`): executes ops against the simulated DDR3
-  device through the POC register protocol, with end-to-end latency
-  accounting from the memory-controller timing model.  This is the
-  faithful reproduction path (paper workflow Fig. 2, steps ①-⑩).
+* **Model face** (:class:`DeviceLib`, ``face="device"``): executes ops
+  against the simulated DDR3 device through the POC register protocol,
+  with end-to-end latency accounting from the memory-controller timing
+  model.  This is the faithful reproduction path (paper workflow Fig. 2,
+  steps ①-⑩).
 
-* **TPU face** (`TpuLib`): the same operations over a JAX HBM arena,
-  dispatched through the Pallas kernel layer (or XLA reference paths).
-  The POC handshake maps onto JAX's asynchronous dispatch: ``Ack`` = op
-  dispatched, ``Fin`` = result buffer committed (``block_until_ready``).
+* **JAX face** (:class:`TpuLib`, ``face="jax"``): the same operations
+  over JAX HBM arena buffers, dispatched through the batched PiM op
+  scheduler (:class:`repro.core.pim_queue.PimOpQueue`) onto the Pallas
+  kernel layer (or XLA reference paths).  The POC handshake maps onto
+  JAX's asynchronous dispatch: ``Ack`` = op dispatched, ``Fin`` = result
+  buffer committed (``block_until_ready``).
 
-Both are built for extension: registering a new PiM op is one entry in
-``_OPS`` plus its executor — the software mirror of the paper's
-"60 additional lines of Verilog" extensibility argument.
+Both faces implement the :class:`PimLib` protocol — ``copy / init /
+rand / read / write / flush`` with uniform :class:`Blocking` semantics —
+and every mutation returns a unified :class:`OpReceipt`: ``latency_ns``
+carries the model-face timing account, ``launches`` the JAX-face kernel
+dispatch count, ``n_ops`` the logical row/page ops either way.  Op
+behaviour is defined once, in the opcode-keyed registry
+(:mod:`repro.core.op_registry`): each :class:`repro.core.isa.Opcode`
+maps to per-face executors (model face → :class:`Instruction` sequences
+through the MemoryController/POC; JAX face → ``PimOpQueue`` flush
+executors), so registering a new PiM op is one registry entry plus its
+executors on whichever faces support it — the software mirror of the
+paper's "60 additional lines of Verilog" extensibility argument.
+Capability flags (:meth:`PimLib.supports`) let callers fall back
+gracefully on faces that lack an op.
 """
 
 from __future__ import annotations
 
+import abc
 import enum
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.drange import ops as dr_ops
+
+from . import op_registry
 from .allocator import Allocation, SubarrayAllocator
 from .coherence import CoherenceModel, CoherencePolicy
 from .isa import Instruction, Opcode
 from .memctrl import MemoryController
+from .pim_queue import PimOpQueue
 from .poc import PimOpsController
 
 
 class Blocking(enum.Enum):
-    ACK = "ack"    # return once the POC acknowledged the op
-    FIN = "fin"    # block until the command sequence finished
+    ACK = "ack"    # return once the op is dispatched (POC Ack / async JAX)
+    FIN = "fin"    # block until the op's effects are committed
+
+
+@dataclass
+class OpReceipt:
+    """What every pimolib mutation returns, on every face.
+
+    ``latency_ns`` is the model-face end-to-end account (POC handshake +
+    command sequence + coherence maintenance); ``launches`` is the
+    JAX-face kernel dispatch count this call issued (0 with
+    ``deferred=True`` until the coalescing flush pays it); ``n_ops``
+    counts logical row/page operations on both faces.
+    """
+
+    ok: bool
+    op: str                      # registry op name (or baseline path name)
+    face: str = "device"
+    n_ops: int = 1
+    latency_ns: float = 0.0      # model-face accounting
+    launches: int = 0            # JAX-face dispatches issued by this call
+    deferred: bool = False       # queued for a later coalescing flush
+
+
+class PimLib(abc.ABC):
+    """The pimolib protocol: one op vocabulary over both substrates.
+
+    Uniform semantics: ``copy``/``init``/``write`` mutate pages named by
+    :class:`Allocation` handles and return an :class:`OpReceipt`;
+    ``read`` returns page contents (flushing deferred work first);
+    ``flush`` drains any deferred backlog; ``rand`` draws true-random
+    bits from the face's D-RaNGe implementation.  ``Blocking.FIN`` is a
+    full synchronization point on every face.
+    """
+
+    face: str = "?"
+
+    @abc.abstractmethod
+    def copy(self, src: Allocation, dst: Allocation,
+             blocking: Blocking = Blocking.ACK) -> OpReceipt: ...
+
+    @abc.abstractmethod
+    def init(self, dst: Allocation, value: float = 0.0,
+             blocking: Blocking = Blocking.ACK) -> OpReceipt: ...
+
+    @abc.abstractmethod
+    def read(self, alloc: Allocation): ...
+
+    @abc.abstractmethod
+    def write(self, alloc: Allocation, values) -> OpReceipt: ...
+
+    @abc.abstractmethod
+    def flush(self, blocking: Blocking = Blocking.ACK) -> OpReceipt: ...
+
+    @abc.abstractmethod
+    def rand(self, n_bits: int, seed=None) -> Tuple[np.ndarray, OpReceipt]: ...
+
+    def supports(self, opcode: Opcode) -> bool:
+        """Capability flag: does this face implement ``opcode``?"""
+        return op_registry.supports(opcode, self.face)
 
 
 # ---------------------------------------------------------------------- #
@@ -45,30 +123,36 @@ class Blocking(enum.Enum):
 # ---------------------------------------------------------------------- #
 
 
-@dataclass
-class OpReceipt:
-    """What a pimolib call returns: success + accounted latency."""
-
-    ok: bool
-    latency_ns: float
-    op: str
-
-
-class DeviceLib:
+class DeviceLib(PimLib):
     """pimolib over the simulated DDR3 prototype."""
+
+    face = op_registry.FACE_DEVICE
 
     def __init__(
         self,
         poc: PimOpsController,
         allocator: SubarrayAllocator,
         coherence: CoherencePolicy = CoherencePolicy.PRECISE,
+        trng=None,
     ) -> None:
         self.poc = poc
         self.allocator = allocator
         self.coherence = CoherenceModel(coherence, poc.mc)
+        self.trng = trng    # DRangeTRNG; required for rand()
         self.zero_rows: Dict[int, int] = {}  # group -> reserved all-zeros row
+        self.stats = {"copies": 0, "inits": 0, "reads": 0, "writes": 0,
+                      "rand_bits": 0}
+
+    def supports(self, opcode: Opcode) -> bool:
+        if opcode is Opcode.DR_GEN and self.trng is None:
+            return False    # needs a characterized TRNG attached
+        return super().supports(opcode)
 
     # -- supervisor-software services ----------------------------------- #
+
+    def attach_trng(self, trng) -> None:
+        """Attach a characterized D-RaNGe TRNG; enables :meth:`rand`."""
+        self.trng = trng
 
     def reserve_zero_row(self, group: int) -> int:
         """RowClone-Init copies from a reserved all-zeros row per subarray."""
@@ -110,39 +194,109 @@ class DeviceLib:
             ok &= self.poc.last_ok
         return ok, len(insns) * self.poc.mc.poc_handshake_ns()
 
+    def _run_op(self, opcode: Opcode, src: Optional[Allocation],
+                dst: Allocation, blocking: Blocking, batch: bool,
+                *, write_back: bool, coherence_on: Allocation) -> OpReceipt:
+        """Registry-driven dispatch: coherence maintenance + the spec's
+        Instruction sequence through the POC, timed end to end."""
+        spec = op_registry.get_op(opcode)
+        if spec is None or spec.device_insns is None:
+            raise NotImplementedError(
+                f"{opcode!r} has no model-face executor (supports()=False)")
+        t0 = self.poc.mc.now_ns
+        latency = self.coherence.flush_cost_ns(coherence_on, self.allocator,
+                                               write_back=write_back)
+        insns = spec.device_insns(self, src, dst)
+        ok, handshakes = self._dispatch(insns, blocking, batch)
+        latency += handshakes + self.poc.mc.now_ns - t0
+        return OpReceipt(ok, spec.name, face=self.face, n_ops=dst.nrows,
+                         latency_ns=latency)
+
+    # -- PimLib protocol ------------------------------------------------- #
+
     def copy(self, src: Allocation, dst: Allocation,
-             blocking: Blocking = Blocking.FIN, batch: bool = True) -> OpReceipt:
+             blocking: Blocking = Blocking.ACK, batch: bool = True) -> OpReceipt:
         """RowClone-Copy src -> dst (row lists must be same-subarray),
         one POC handshake per batch by default."""
         if src.group != dst.group or src.nrows != dst.nrows:
             raise ValueError("copy operands must be same-subarray, same size")
-        t0 = self.poc.mc.now_ns
-        latency = self.coherence.flush_cost_ns(src, self.allocator, write_back=True)
-        insns = [Instruction(Opcode.RC_COPY, s, d)
-                 for s, d in zip(src.rows, dst.rows)]
-        ok, handshakes = self._dispatch(insns, blocking, batch)
-        latency += handshakes + self.poc.mc.now_ns - t0
-        return OpReceipt(ok, latency, "rowclone_copy")
+        self.stats["copies"] += src.nrows
+        return self._run_op(Opcode.RC_COPY, src, dst, blocking, batch,
+                            write_back=True, coherence_on=src)
 
-    def init(self, dst: Allocation, blocking: Blocking = Blocking.FIN,
-             batch: bool = True) -> OpReceipt:
+    def init(self, dst: Allocation, value: float = 0.0,
+             blocking: Blocking = Blocking.ACK, batch: bool = True) -> OpReceipt:
         """RowClone-Init: copy the reserved zero row over each dst row
-        (one POC handshake per batch by default, as for :meth:`copy`)."""
-        zero = self.reserve_zero_row(dst.group)
-        t0 = self.poc.mc.now_ns
-        latency = self.coherence.flush_cost_ns(dst, self.allocator, write_back=False)
-        insns = [Instruction(Opcode.RC_INIT, zero, d) for d in dst.rows]
-        ok, handshakes = self._dispatch(insns, blocking, batch)
-        latency += handshakes + self.poc.mc.now_ns - t0
-        return OpReceipt(ok, latency, "rowclone_init")
+        (one POC handshake per batch by default, as for :meth:`copy`).
+        Nonzero fill has no RowClone sequence — it falls back to the CPU
+        memset path (graceful capability fallback).  The device stores
+        bytes, so only integer fills in [0, 255] reproduce the JAX
+        face's element-wise fill; anything else raises rather than
+        silently truncating."""
+        if isinstance(value, Blocking):   # v1 signature: init(dst, blocking)
+            raise TypeError("pimolib v2 moved `value` before `blocking`: "
+                            "call init(dst, value=0.0, blocking=...)")
+        if value != 0.0:
+            if not (float(value).is_integer() and 0 <= value <= 255):
+                raise ValueError(
+                    f"model-face init fill must be a byte value, got {value!r}")
+            rec = self.cpu_init(dst, value)
+            self.stats["inits"] += dst.nrows
+            return rec
+        rec = self._run_op(Opcode.RC_INIT, None, dst, blocking, batch,
+                           write_back=False, coherence_on=dst)
+        self.stats["inits"] += dst.nrows
+        return rec
 
-    def rand_dram(self, n_bits: int, trng) -> Tuple[np.ndarray, OpReceipt]:
-        """Paper's rand_dram(): drain the POC random-number buffer."""
-        bits = trng.random_bits(n_bits)
+    def rand(self, n_bits: int, seed=None) -> Tuple[np.ndarray, OpReceipt]:
+        """Paper's rand_dram(): drain the POC random-number buffer.
+        Requires an attached characterized TRNG (``supports(DR_GEN)``)."""
+        if self.trng is None:
+            raise NotImplementedError(
+                "rand() needs a characterized DRangeTRNG: "
+                "DeviceLib(..., trng=...) or attach_trng()")
+        bits = self.trng.random_bits(n_bits)
         chunks = -(-n_bits // self.poc.mc.proto.drange_bits_per_read)
         latency = (self.poc.mc.proto.drange_latency_ns
                    + (chunks - 1) * self.poc.mc.proto.drange_sustained_ns)
-        return bits, OpReceipt(True, latency, "drange_rand")
+        self.stats["rand_bits"] += n_bits
+        return bits, OpReceipt(True, "drange_rand", face=self.face,
+                               n_ops=n_bits, latency_ns=latency)
+
+    def read(self, alloc: Allocation) -> np.ndarray:
+        """Page contents as (nrows, row_bytes) uint8 (CPU read path)."""
+        mc = self.poc.mc
+        out = np.stack([mc.device.read_row(r) for r in alloc.rows])
+        self.allocator.touch_cpu_read(alloc)
+        self.stats["reads"] += alloc.nrows
+        return out
+
+    def write(self, alloc: Allocation, values) -> OpReceipt:
+        """CPU write path: store ``values`` (castable to (nrows,
+        row_bytes) uint8) into the allocation's rows.  There is no PiM
+        sequence for host-data ingress, so this is accounted as a CPU
+        memcpy — the same fallback the serving-trace replay uses for
+        ``KV_WRITE`` (``supports(Opcode.KV_WRITE)`` is False here)."""
+        mc = self.poc.mc
+        geo = mc.device.geometry
+        raw = np.asarray(values)
+        vals = raw.astype(np.uint8).reshape(alloc.nrows, geo.row_bytes)
+        if not np.array_equal(vals.astype(raw.dtype).reshape(raw.shape), raw):
+            raise ValueError(
+                "model-face write payload must be byte values in [0, 255] "
+                "(the device stores bytes; silent truncation would diverge "
+                "from the JAX face)")
+        for r, row in zip(alloc.rows, vals):
+            mc.device.write_row(r, row)
+        self.allocator.touch_cpu_write(alloc)
+        self.stats["writes"] += alloc.nrows
+        nbytes = alloc.nrows * mc.proto.row_bytes
+        return OpReceipt(True, "cpu_write", face=self.face,
+                         n_ops=alloc.nrows, latency_ns=mc.memcpy_ns(nbytes))
+
+    def flush(self, blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        """The model face executes synchronously: nothing is deferred."""
+        return OpReceipt(True, "flush", face=self.face, n_ops=0)
 
     # -- CPU baselines (memcpy / calloc through the core) ----------------- #
 
@@ -152,20 +306,31 @@ class DeviceLib:
         for s, d in zip(src.rows, dst.rows):
             mc.device.write_row(d, mc.device.read_row(s))
         self.allocator.touch_cpu_write(dst)
-        return OpReceipt(True, mc.memcpy_ns(nbytes), "cpu_memcpy")
+        return OpReceipt(True, "cpu_memcpy", face=self.face, n_ops=src.nrows,
+                         latency_ns=mc.memcpy_ns(nbytes))
 
-    def cpu_init(self, dst: Allocation) -> OpReceipt:
+    def cpu_init(self, dst: Allocation, value: float = 0.0) -> OpReceipt:
         mc = self.poc.mc
         nbytes = dst.nrows * mc.proto.row_bytes
         geo = mc.device.geometry
+        fill = np.full(geo.row_bytes, int(value), np.uint8)
         for d in dst.rows:
-            mc.device.write_row(d, np.zeros(geo.row_bytes, np.uint8))
+            mc.device.write_row(d, fill)
         self.allocator.touch_cpu_write(dst)
-        return OpReceipt(True, mc.memset_ns(nbytes), "cpu_calloc")
+        return OpReceipt(True, "cpu_calloc", face=self.face, n_ops=dst.nrows,
+                         latency_ns=mc.memset_ns(nbytes))
+
+    # -- deprecated v1 spelling ------------------------------------------ #
+
+    def rand_dram(self, n_bits: int, trng) -> Tuple[np.ndarray, OpReceipt]:
+        warnings.warn("rand_dram(n, trng) is deprecated: attach_trng(trng) "
+                      "then rand(n)", DeprecationWarning, stacklevel=2)
+        self.attach_trng(trng)
+        return self.rand(n_bits)
 
 
 # ---------------------------------------------------------------------- #
-# TPU face — the same ops over a JAX HBM arena
+# JAX face — the same ops over JAX HBM arena buffers
 # ---------------------------------------------------------------------- #
 
 
@@ -186,91 +351,219 @@ class TpuArena:
         return self.buffer.shape[1]
 
 
-class TpuLib:
-    """pimolib over a JAX arena (serving/training integration point).
+class TpuLib(PimLib):
+    """pimolib over JAX arena buffers (serving/training integration point).
 
     Arena mutations route through the batched PiM op scheduler
-    (:class:`repro.serving.pim_queue.PimOpQueue`) — the same queue the
-    serving-side paged KV cache uses — so training-side users get op
-    coalescing and unified launch accounting for free.  By default every
-    call still flushes immediately (the historical synchronous
-    semantics); construct with ``deferred=True`` (or toggle the
-    attribute) to collect ops across calls and pay one coalesced launch
-    per op kind at :meth:`flush`.  Deferred mode preserves program-order
-    results: an op that touches a row a pending op already touched, or
-    that mixes kinds with pending work, flushes the backlog first (the
-    common bulk case — many same-kind ops on disjoint rows — still
-    coalesces to one launch).  Reads flush implicitly, and
-    ``Blocking.FIN`` is always a full synchronization point.
+    (:class:`repro.core.pim_queue.PimOpQueue`) — the same queue the
+    serving-side paged KV cache shares — so every client gets op
+    coalescing and unified launch accounting.  By default every call
+    still flushes immediately (the historical synchronous semantics);
+    construct with ``deferred=True`` (or toggle the attribute) to
+    collect ops across calls and pay one coalesced launch per op kind at
+    :meth:`flush`.  Hazard-aware admission lives in the queue
+    (:meth:`PimOpQueue.admit`): deferred mode preserves program-order
+    results by flushing the backlog when an op mixes kinds with pending
+    work or touches a row a pending op already touched.  Reads flush
+    implicitly, and ``Blocking.FIN`` is always a full synchronization
+    point.
+
+    The lib binds either one :class:`TpuArena` (training-side single
+    buffer, pages on axis 0) or a list of layered ``(L, P, ...)``
+    buffers (the serving KV cache's (k, v) pair, pages on axis 1) — the
+    queue flushes all bound buffers together.
     """
 
-    def __init__(self, arena: TpuArena, *, use_pallas: bool = False,
-                 deferred: bool = False) -> None:
-        from repro.kernels.drange import ops as dr_ops
-        from repro.serving.pim_queue import PimOpQueue
+    face = op_registry.FACE_JAX
+
+    def __init__(self, arena: Optional[TpuArena] = None, *,
+                 buffers: Optional[Sequence[jax.Array]] = None,
+                 layered: Optional[bool] = None,
+                 allocator: Optional[SubarrayAllocator] = None,
+                 use_pallas: bool = False, deferred: bool = False,
+                 queue: Optional[PimOpQueue] = None) -> None:
+        if arena is not None and buffers is not None:
+            raise ValueError("pass either arena= or buffers=, not both")
         self.arena = arena
         self.use_pallas = use_pallas
         self.deferred = deferred
-        self.queue = PimOpQueue(use_pallas=use_pallas)
-        self._dr = dr_ops
-        self._pending_rows: set = set()
-        self._pending_kind: Optional[str] = None
-        self.stats = {"copies": 0, "inits": 0, "rand_words": 0}
+        self.queue = queue if queue is not None else PimOpQueue(
+            use_pallas=use_pallas)
+        if self.queue.owner is not None:
+            raise ValueError(
+                "PimOpQueue is already driven by another lib — pending ops "
+                "carry no owner, so two libs flushing one queue would land "
+                "each other's ops on the wrong arenas; share ONE lib across "
+                "clients for joint accounting instead")
+        self.queue.owner = self
+        self.stats = {"copies": 0, "inits": 0, "reads": 0, "writes": 0,
+                      "rand_bits": 0}
+        self._rand_ctr = 0   # advances the default rand() seed per call
+        if arena is not None:
+            self.buffers: List[jax.Array] = [arena.buffer]
+            self.allocator = arena.allocator
+            self.layered = False if layered is None else layered
+        else:
+            self.buffers = list(buffers) if buffers is not None else []
+            self.allocator = allocator
+            self.layered = True if layered is None else layered
 
-    def _admit(self, kind: str, rows) -> None:
-        """Flush the backlog when enqueueing would break program order:
-        the queue replays by kind (copies before inits), so mixed kinds
-        or row reuse must not coalesce across the hazard."""
-        if self.queue.pending_ops and (
-                self._pending_kind != kind
-                or any(r in self._pending_rows for r in rows)):
-            self.flush()
-        self._pending_kind = kind
-        self._pending_rows.update(rows)
+    def adopt_buffers(self, buffers: Sequence[jax.Array], *,
+                      layered: bool = True,
+                      allocator: Optional[SubarrayAllocator] = None) -> None:
+        """Bind the arena buffers this face flushes against — how the
+        paged KV cache plugs its (k, v) pair into a caller-supplied lib.
+        A lib already bound to arenas refuses to rebind: the first
+        owner's page ids would silently flush against the new buffers
+        (share a queue across libs for joint accounting instead)."""
+        if self.queue.pending_ops:
+            raise RuntimeError("cannot adopt buffers with pending ops")
+        if self.buffers or self.arena is not None:
+            raise RuntimeError(
+                "lib is already bound to arenas; construct one lib per "
+                "arena owner (clients share the lib for joint accounting)")
+        self._set_buffers(buffers)
+        self.layered = layered
+        if allocator is not None:
+            self.allocator = allocator
 
-    def copy_pages(self, src: Allocation, dst: Allocation,
-                   blocking: Blocking = Blocking.ACK) -> None:
+    def _set_buffers(self, buffers: Sequence[jax.Array]) -> None:
+        """The ONE place buffer state changes: keeps a wrapping TpuArena
+        (if any) in sync so external holders never read stale data."""
+        self.buffers = list(buffers)
+        if self.arena is not None:
+            self.arena.buffer = self.buffers[0]
+
+    # -- internals ------------------------------------------------------- #
+
+    def _page_rows(self, alloc: Allocation) -> jax.Array:
+        return jnp.asarray(alloc.rows, jnp.int32)
+
+    def _receipt(self, op: str, n_ops: int, blocking: Blocking) -> OpReceipt:
+        """Flush-or-defer and account launches for one mutation call."""
+        if self.deferred and blocking is not Blocking.FIN:
+            return OpReceipt(True, op, face=self.face, n_ops=n_ops,
+                             deferred=True)
+        before = self.queue.stats["launches"]
+        self.flush(blocking)
+        return OpReceipt(True, op, face=self.face, n_ops=n_ops,
+                         launches=self.queue.stats["launches"] - before)
+
+    # -- PimLib protocol ------------------------------------------------- #
+
+    def copy(self, src: Allocation, dst: Allocation,
+             blocking: Blocking = Blocking.ACK) -> OpReceipt:
         if src.group != dst.group or src.nrows != dst.nrows:
             raise ValueError("copy operands must be same-slab, same size")
-        self._admit("page_copy", list(src.rows) + list(dst.rows))
+        self.queue.admit("page_copy", dst.rows, self.flush, reads=src.rows)
         for s, d in zip(src.rows, dst.rows):
             self.queue.enqueue_copy(s, d)
         self.stats["copies"] += src.nrows
-        if not self.deferred or blocking is Blocking.FIN:
-            self.flush(blocking)
+        return self._receipt("rowclone_copy", src.nrows, blocking)
 
-    def init_pages(self, dst: Allocation, value=0.0,
-                   blocking: Blocking = Blocking.ACK) -> None:
-        self._admit("page_init", dst.rows)
+    def init(self, dst: Allocation, value: float = 0.0,
+             blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        self.queue.admit("page_init", dst.rows, self.flush)
         for d in dst.rows:
             self.queue.enqueue_init(d, value)
         self.stats["inits"] += dst.nrows
-        if not self.deferred or blocking is Blocking.FIN:
-            self.flush(blocking)
+        return self._receipt("rowclone_init", dst.nrows, blocking)
 
-    def flush(self, blocking: Blocking = Blocking.ACK) -> None:
-        """Drain pending ops: one coalesced launch per op kind.  The
-        (pages, elems) buffer flushes as a single-layer arena view."""
+    def flush(self, blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        """Drain pending ops: one coalesced launch per op kind across
+        all bound buffers (an unlayered arena flushes as a single-layer
+        view)."""
+        before = self.queue.stats["launches"]
         if self.queue.pending_ops:
-            (buf,) = self.queue.flush(self.arena.buffer[None])
-            self.arena.buffer = buf[0]
-        self._pending_rows.clear()
-        self._pending_kind = None
+            if not self.buffers:
+                raise RuntimeError("flush with pending ops but no buffers "
+                                   "bound (adopt_buffers first)")
+            views = [b if self.layered else b[None] for b in self.buffers]
+            out = self.queue.flush(*views)
+            self._set_buffers([o if self.layered else o[0] for o in out])
         if blocking is Blocking.FIN:
-            self.arena.buffer.block_until_ready()
+            for b in self.buffers:
+                b.block_until_ready()
+        return OpReceipt(True, "flush", face=self.face, n_ops=0,
+                         launches=self.queue.stats["launches"] - before)
 
-    def rand(self, seed: jax.Array, n_rows: int, n_cols: int) -> jax.Array:
-        self.stats["rand_words"] += n_rows * n_cols
-        return self._dr.pim_random_u32(seed, n_rows, n_cols, use_pallas=self.use_pallas)
+    def rand(self, n_bits: int, seed=None) -> Tuple[np.ndarray, OpReceipt]:
+        """True-random bits from the D-RaNGe kernel (one launch).  With
+        no explicit seed the stream advances per call, matching the
+        model face's fresh-bits-per-call semantics; pass ``seed`` for a
+        reproducible draw."""
+        if seed is None:
+            self._rand_ctr += 1
+            seed = jnp.asarray([0x9E3779B9 + self._rand_ctr,
+                                0x85EBCA6B ^ self._rand_ctr], jnp.uint32)
+        words = dr_ops.pim_random_u32(seed, 1, -(-n_bits // 32),
+                                      use_pallas=self.use_pallas)
+        self.stats["rand_bits"] += n_bits   # logical bits, like DeviceLib
+        self.queue.count_external("drange_rand")
+        bits = np.unpackbits(
+            np.asarray(words).view(np.uint8), bitorder="little")[:n_bits]
+        return bits, OpReceipt(True, "drange_rand", face=self.face,
+                               n_ops=n_bits, launches=1)
+
+    def read(self, alloc: Allocation, buffer: int = 0) -> jax.Array:
+        """Page contents of ``buffers[buffer]`` (the index mirrors
+        :meth:`write`); deferred mutations land before any read.
+        Unlayered: (nrows, elems); layered: (layers, nrows, ...)."""
+        self.flush()
+        self.stats["reads"] += alloc.nrows
+        buf = self.buffers[buffer]
+        rows = self._page_rows(alloc)
+        return buf[rows] if not self.layered else buf[:, rows]
+
+    def write(self, alloc: Allocation, values, buffer: int = 0) -> OpReceipt:
+        """Host-data ingress: direct XLA scatter into ``buffers[buffer]``
+        (flushes first to preserve enqueue order vs direct writes)."""
+        self.flush()
+        buf = self.buffers[buffer]
+        rows = self._page_rows(alloc)
+        vals = jnp.asarray(values).astype(buf.dtype)
+        idx = rows if not self.layered else (slice(None), rows)
+        new = list(self.buffers)
+        new[buffer] = buf.at[idx].set(vals)
+        self._set_buffers(new)
+        self.stats["writes"] += alloc.nrows
+        self.queue.count_external("host_write")
+        return OpReceipt(True, "host_write", face=self.face,
+                         n_ops=alloc.nrows, launches=1)
+
+    # -- extras shared with the drange kernel layer ----------------------- #
+
+    def rand_u32(self, seed: jax.Array, n_rows: int, n_cols: int) -> jax.Array:
+        """Raw u32 word generation (the training-side consumer API)."""
+        self.stats["rand_bits"] += n_rows * n_cols * 32
+        self.queue.count_external("drange_rand")
+        return dr_ops.pim_random_u32(seed, n_rows, n_cols,
+                                     use_pallas=self.use_pallas)
+
+    # -- deprecated v1 spellings ------------------------------------------ #
+
+    def _deprecated(self, old: str, new: str) -> None:
+        warnings.warn(f"TpuLib.{old} is deprecated: use {new} "
+                      "(pimolib v2 protocol)", DeprecationWarning,
+                      stacklevel=3)
+
+    def copy_pages(self, src: Allocation, dst: Allocation,
+                   blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        self._deprecated("copy_pages", "copy")
+        return self.copy(src, dst, blocking)
+
+    def init_pages(self, dst: Allocation, value=0.0,
+                   blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        self._deprecated("init_pages", "init")
+        return self.init(dst, value, blocking)
 
     def read_pages(self, alloc: Allocation) -> jax.Array:
-        self.flush()   # deferred mutations land before any read
-        return self.arena.buffer[jnp.asarray(alloc.rows, jnp.int32)]
+        self._deprecated("read_pages", "read")
+        return self.read(alloc)
 
-    def write_pages(self, alloc: Allocation, values: jax.Array) -> None:
-        self.flush()   # preserve enqueue order vs direct writes
-        self.arena.buffer = self.arena.buffer.at[
-            jnp.asarray(alloc.rows, jnp.int32)].set(values.astype(self.arena.buffer.dtype))
+    def write_pages(self, alloc: Allocation, values: jax.Array) -> OpReceipt:
+        self._deprecated("write_pages", "write")
+        return self.write(alloc, values)
 
 
 def make_tpu_arena(num_slabs: int, pages_per_slab: int, page_elems: int,

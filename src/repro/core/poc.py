@@ -26,6 +26,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from . import op_registry
 from .isa import Instruction, Opcode
 from .memctrl import MemoryController, SequenceResult
 
@@ -98,27 +99,30 @@ class PimOpsController:
         self.flags.fin = False
 
         t0 = self.mc.now_ns
+        spec = op_registry.get_op(insn.opcode)
         if insn.opcode is Opcode.NOP:
             res = SequenceResult(0.0, [])
-        elif insn.opcode in (Opcode.RC_COPY, Opcode.RC_INIT):
-            res = self.mc.run_sequence("rowclone_copy", insn.operand0, insn.operand1)
-        elif insn.opcode is Opcode.DR_GEN:
-            res = self.mc.run_sequence("drange_read", insn.operand0, insn.operand1)
-            if res.data is not None:
-                for b in res.data:
-                    self.rng_buffer.append(int(b))
         elif insn.opcode is Opcode.READ_BUF:
-            # Drain up to 64 bits into the data register.
+            # Register-file op, not a command sequence: drain up to 64
+            # bits into the data register.
             word = 0
             n = min(64, len(self.rng_buffer))
             for i in range(n):
                 word |= self.rng_buffer.popleft() << i
             self.data_reg = word
             res = SequenceResult(0.0, [])
-        elif insn.opcode is Opcode.BULK_COPY:
-            res = self.mc.run_sequence("rowclone_copy", insn.operand0, insn.operand1)
-        else:  # pragma: no cover - decode guarantees valid opcodes
-            raise ValueError(f"unhandled opcode {insn.opcode}")
+        elif spec is not None and spec.device_seq is not None:
+            # Opcode-keyed registry dispatch: the spec names the memory
+            # controller sequence; poc_post handles any result payload
+            # (D-RaNGe deposits generated bits into the RNG buffer).
+            res = self.mc.run_sequence(spec.device_seq, insn.operand0,
+                                       insn.operand1)
+            if spec.poc_post is not None:
+                spec.poc_post(self, res)
+        else:
+            raise ValueError(
+                f"opcode {insn.opcode!r} has no model-face executor "
+                "(register_pim_op with device_seq to add one)")
 
         self._last_result = res
         self.stats.executed[insn.opcode.name] += 1
@@ -128,10 +132,11 @@ class PimOpsController:
     def _execute_batch(self) -> None:
         """Run every staged instruction under one Ack/Fin pair.
 
-        Homogeneous RowClone batches route through the memory
-        controller's batched sequence (one scheduler entry); mixed
-        batches fall back to per-instruction decode.  ``last_ok`` is the
-        conjunction over the batch."""
+        Batches whose opcodes all map (via the op registry) to the same
+        memory-controller sequence, with no result-payload hook, route
+        through the controller's batched dispatch (one scheduler entry);
+        mixed batches fall back to per-instruction decode.  ``last_ok``
+        is the conjunction over the batch."""
         words, self.insn_buffer = self.insn_buffer, None
         insns = [Instruction.decode(w) for w in words]
         self.flags.start = False
@@ -139,14 +144,16 @@ class PimOpsController:
         self.flags.fin = False
 
         t0 = self.mc.now_ns
+        specs = [op_registry.get_op(i.opcode) for i in insns]
+        seqs = {s.device_seq if s is not None and s.poc_post is None else None
+                for s in specs}
         if not insns:
             # empty batch: acknowledged no-op (do NOT fall back to the
             # stale single-instruction register)
             self._last_result = SequenceResult(0.0, [])
-        elif all(i.opcode in (Opcode.RC_COPY, Opcode.RC_INIT)
-                 for i in insns):
+        elif len(seqs) == 1 and None not in seqs:
             res = self.mc.run_sequence_batch(
-                "rowclone_copy", [(i.operand0, i.operand1) for i in insns])
+                seqs.pop(), [(i.operand0, i.operand1) for i in insns])
             for i in insns:
                 self.stats.executed[i.opcode.name] += 1
             self._last_result = res

@@ -73,13 +73,18 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, params, *, page_size: int = 16,
                  num_pages: int = 256, pcfg: Optional[ParallelConfig] = None,
                  seed: int = 0, use_pallas: bool = False,
-                 interpret: Optional[bool] = None, fused: bool = True):
+                 interpret: Optional[bool] = None, fused: bool = True,
+                 lib=None, record_trace: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
         self.params = params
         self.pcfg = pcfg or ParallelConfig(attention_impl="naive", remat="none")
+        # lib: caller-supplied JAX-face PimLib (pimolib v2) the cache
+        # binds its arenas to — shares the op queue / launch accounting;
+        # record_trace: keep a PimTrace for model-face replay
         self.cache = PagedKVCache(cfg, num_pages=num_pages,
-                                  page_size=page_size, use_pallas=use_pallas)
+                                  page_size=page_size, use_pallas=use_pallas,
+                                  lib=lib, record_trace=record_trace)
         self.use_pallas = use_pallas
         # interpret-mode plumbing (was hardcoded True): default follows
         # the backend — compiled kernels on TPU, interpreter elsewhere
@@ -209,6 +214,8 @@ class PagedEngine:
             self.cache.v_arena, bt, lens, jnp.asarray(pages),
             jnp.asarray(slots), seed, jnp.asarray(temps))
         self.cache.commit_fused_round(rids, k_arena, v_arena)
+        # per-engine count: the queue's fused_decode counter is global
+        # to the (possibly shared) lib, this one is this engine's own
         self.stats["fused_dispatches"] += 1
         return np.asarray(tokens)[:B]      # the round's one host transfer
 

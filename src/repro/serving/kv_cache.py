@@ -18,19 +18,31 @@ properties:
 The arena tensors are (layers, pages, page_size, kvh, hd); the decode
 step attends through `repro.kernels.paged_attention`.
 
-All arena mutations route through the batched PiM op scheduler
-(:class:`repro.serving.pim_queue.PimOpQueue`): ops are enqueued as
-lightweight records and flushed as one coalesced launch per op kind, so
-a CoW fork, a sequence free, or a bulk prompt write costs a constant
-number of kernel dispatches regardless of ``num_layers`` or batch size.
-Batched copies read all sources from the pre-flush arena state (each
-RowClone in a batch is independent); destination pages are always
-freshly allocated, so no chaining can occur within a flush.
+All arena mutations route through a JAX-face :class:`PimLib`
+(pimolib v2): the cache binds its (k, v) arena pair to the lib and ops
+are enqueued on the lib's batched PiM op scheduler
+(:class:`repro.core.pim_queue.PimOpQueue`) as lightweight records,
+flushed as one coalesced launch per op kind — so a CoW fork, a sequence
+free, or a bulk prompt write costs a constant number of kernel
+dispatches regardless of ``num_layers`` or batch size.  A caller may
+supply the lib (``PagedKVCache(..., lib=my_lib)``) to share dispatch
+accounting with other arena clients; by default the cache constructs
+its own :class:`repro.core.pimolib.TpuLib`.  Batched copies read all
+sources from the pre-flush arena state (each RowClone in a batch is
+independent); destination pages are always freshly allocated, so no
+chaining can occur within a flush.
+
+With ``record_trace=True`` the cache keeps a
+:class:`repro.serving.trace.PimTrace` of every coalesced mutation batch
+— replayable on the ``DeviceLib`` model face for paper-style RowClone
+vs memcpy/calloc latency accounting of the actual serving workload
+(:func:`repro.serving.trace.replay_on_device`).
 
 The engine's fused decode round is the one exception to queue routing:
 its KV scatter runs *inside* the jitted step on donated arenas, and the
 cache adopts the results via :meth:`PagedKVCache.commit_fused_round`
-(which still records the dispatch in the queue's launch counters).
+(which still records the dispatch in the queue's launch counters, and
+the writes in the trace).
 """
 
 from __future__ import annotations
@@ -44,7 +56,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
-from repro.serving.pim_queue import PimOpQueue
+from repro.core.pimolib import PimLib, TpuLib
+from repro.serving.trace import PimTrace
 
 
 @dataclass
@@ -58,7 +71,8 @@ class Sequence:
 class PagedKVCache:
     def __init__(self, cfg: ModelConfig, *, num_pages: int = 128,
                  page_size: int = 16, num_slabs: int = 4,
-                 dtype=jnp.bfloat16, use_pallas: bool = False):
+                 dtype=jnp.bfloat16, use_pallas: bool = False,
+                 lib: Optional[PimLib] = None, record_trace: bool = False):
         assert num_pages % num_slabs == 0
         hd = cfg.resolved_head_dim
         self.cfg = cfg
@@ -67,15 +81,55 @@ class PagedKVCache:
         self.use_pallas = use_pallas
         self.n_layers = _num_attn_layers(cfg)
         kvh = cfg.num_kv_heads
-        self.k_arena = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
-        self.v_arena = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
+        k0 = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
+        v0 = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
         self.allocator = SubarrayAllocator(
             arena_groups(num_slabs, num_pages // num_slabs))
+        # arena mutations route through a JAX-face PimLib; callers may
+        # supply one to unify dispatch accounting across clients
+        if lib is None:
+            lib = TpuLib(buffers=[k0, v0], layered=True,
+                         allocator=self.allocator, use_pallas=use_pallas,
+                         deferred=True)
+        else:
+            if lib.face != "jax":
+                raise ValueError(
+                    f"PagedKVCache needs a JAX-face PimLib, got {lib.face!r}"
+                    " (replay a recorded trace for model-face accounting)")
+            lib.adopt_buffers([k0, v0], layered=True,
+                              allocator=self.allocator)
+        self.lib = lib
+        self.queue = lib.queue
         self.refcount: Dict[int, int] = {}
         self.page_alloc: Dict[int, object] = {}
         self.seqs: Dict[int, Sequence] = {}
-        self.queue = PimOpQueue(use_pallas=use_pallas)
         self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0}
+        self.trace: Optional[PimTrace] = None
+        if record_trace:
+            self.trace = PimTrace(num_pages=num_pages, num_slabs=num_slabs,
+                                  page_size=page_size,
+                                  kv_itemsize=np.dtype(dtype).itemsize)
+        # always (re)bind, so a lib reused from a previous cache does not
+        # keep recording into that cache's trace
+        self.queue.trace = self.trace
+
+    # the arenas live on the lib (so a shared lib sees every mutation);
+    # these properties keep the public names stable
+    @property
+    def k_arena(self) -> jax.Array:
+        return self.lib.buffers[0]
+
+    @k_arena.setter
+    def k_arena(self, value: jax.Array) -> None:
+        self.lib.buffers[0] = value
+
+    @property
+    def v_arena(self) -> jax.Array:
+        return self.lib.buffers[1]
+
+    @v_arena.setter
+    def v_arena(self, value: jax.Array) -> None:
+        self.lib.buffers[1] = value
 
     # ------------------------- page management ------------------------ #
 
@@ -100,6 +154,7 @@ class PagedKVCache:
         sequence's pages in one launch."""
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
+            self.queue.admit("page_init", (page,), self.lib.flush)
             self.queue.enqueue_init(page)
             self.stats["pages_zeroed"] += 1
             self.allocator.free(self.page_alloc.pop(page))
@@ -107,8 +162,7 @@ class PagedKVCache:
 
     def flush_pending(self) -> None:
         """Drain the op queue: one coalesced launch per pending op kind."""
-        self.k_arena, self.v_arena = self.queue.flush(self.k_arena,
-                                                      self.v_arena)
+        self.lib.flush()
 
     # ------------------------- sequence API ---------------------------- #
 
@@ -154,7 +208,11 @@ class PagedKVCache:
         return dst
 
     def _copy_page(self, src: int, dst: int) -> None:
-        """Enqueue a full-depth (all layers) page copy; callers flush."""
+        """Enqueue a full-depth (all layers) page copy; callers flush.
+        ``admit`` flushes any hazardous backlog first (e.g. a shared
+        deferred lib's pending init on the source page — KIND_ORDER
+        would otherwise replay the copy before it)."""
+        self.queue.admit("page_copy", (dst,), self.lib.flush, reads=(src,))
         self.queue.enqueue_copy(src, dst)
 
     def ensure_writable_tail(self, seq: Sequence) -> None:
@@ -182,6 +240,7 @@ class PagedKVCache:
         self.ensure_writable_tail(seq)
         page = seq.pages[-1]
         slot = seq.length % self.page_size
+        self.queue.admit("kv_write", (page,), self.lib.flush)
         self.queue.enqueue_kv_write(page, slot, k, v)
         self.flush_pending()   # CoW copy (if any) lands before the write
         seq.length += 1
@@ -198,6 +257,7 @@ class PagedKVCache:
             seq = self.seqs[sid]
             pages.append(seq.pages[-1])
             slots.append(seq.length % self.page_size)
+        self.queue.admit("kv_write", pages, self.lib.flush)
         self.queue.enqueue_kv_writes(pages, slots, k, v)
         self.flush_pending()
         for sid in seq_ids:
@@ -210,6 +270,7 @@ class PagedKVCache:
         n = k.shape[1]
         pages = [seq.pages[(start + i) // self.page_size] for i in range(n)]
         slots = [(start + i) % self.page_size for i in range(n)]
+        self.queue.admit("kv_write", pages, self.lib.flush)
         self.queue.enqueue_kv_writes(pages, slots, k, v)
         self.flush_pending()
 
@@ -229,9 +290,19 @@ class PagedKVCache:
         the token just written.  Tails must have been reserved with
         ``ensure_writable_tail`` before the step ran.  The single fused
         dispatch is recorded in the queue's launch counters so per-round
-        dispatch accounting keeps one source of truth."""
+        dispatch accounting keeps one source of truth (and, when
+        tracing, the round's writes land in the trace)."""
         self.k_arena = k_arena
         self.v_arena = v_arena
+        if self.trace is not None:
+            pages = [self.seqs[sid].pages[-1] for sid in seq_ids]
+            slots = [self.seqs[sid].length % self.page_size
+                     for sid in seq_ids]
+            tok_bytes = (2 * self.n_layers * self.cfg.num_kv_heads
+                         * self.cfg.resolved_head_dim
+                         * np.dtype(self.dtype).itemsize)
+            self.trace.record_kv_write(pages, slots,
+                                       len(seq_ids) * tok_bytes)
         for sid in seq_ids:
             self.seqs[sid].length += 1
         self.queue.count_external("fused_decode")

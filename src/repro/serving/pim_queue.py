@@ -1,221 +1,19 @@
-"""Batched PiM operation scheduler: the deferred op queue.
+"""Deprecated shim — the batched PiM op scheduler moved to
+``repro.core.pim_queue`` (pimolib v2).
 
-PiDRAM's end-to-end lesson is that in-DRAM ops only win when the dispatch
-path is amortized: one POC handshake per *batch* of row operations, not
-per row.  The serving analogue: every CoW fork, page free, and
-decode-round KV write used to issue ``O(num_layers)`` separate kernel
-launches from Python.  This queue collects those arena mutations as
-lightweight op records and flushes them as ONE coalesced launch per op
-kind per arena — a constant number of dispatches regardless of layer
-count or active-batch size.
-
-Design mirrors :class:`repro.core.memctrl.MemoryController`'s PiM
-sequence registry: each op *kind* registers a flush executor, so new
-batched ops are one ``register_kind`` call plus their executor (the
-software twin of the paper's "60 additional lines of Verilog"
-extensibility argument).
-
-``flush`` takes a variable number of arenas: the paged KV cache flushes
-its (k, v) pair, while :class:`repro.core.pimolib.TpuLib` flushes its
-single training-side buffer through the same queue — both get per-kind
-coalescing and unified launch accounting.  Work dispatched *outside* the
-queue but belonging to the same accounting (the engine's fused decode
-step, one jit call covering forward + scatter) is recorded with
-:meth:`PimOpQueue.count_external` so per-round dispatch counts have one
-source of truth.
-
-Flush ordering is fixed and documented: ``page_copy`` ops land first
-(CoW source pages must be duplicated before anything overwrites them),
-then ``page_init`` (zeroing freed pages), then ``kv_write`` (fresh
-token KV).  Within a kind, op order follows enqueue order; duplicate
-destinations resolve to the last enqueued op.
+The queue is shared core infrastructure (the JAX-face executors of the
+opcode-keyed op registry flush through it), so it no longer lives under
+``serving/``.  Import from :mod:`repro.core.pim_queue` instead; this
+module will be removed in a future PR.
 """
 
-from __future__ import annotations
+import warnings
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Tuple
+from repro.core.pim_queue import FlushFn, KVWriteBatch, PimOpQueue  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.serving.pim_queue has moved to repro.core.pim_queue; "
+    "update imports (this shim will be removed)",
+    DeprecationWarning, stacklevel=2)
 
-from repro.kernels.rowclone import ops as rc_ops
-
-# A flush executor: (queue, arenas, ops) -> arenas (same length tuple).
-FlushFn = Callable[["PimOpQueue", Tuple[jax.Array, ...], list],
-                   Tuple[jax.Array, ...]]
-
-
-@dataclass
-class KVWriteBatch:
-    """Pending slot writes: full-depth K/V for a batch of tokens,
-    kept stacked as (layers, batch, ...) so enqueue/flush do O(1) host
-    work in the batch size (no per-token slicing or re-stacking)."""
-
-    pages: List[int]
-    slots: List[int]
-    k: jax.Array      # (layers, batch, kvh, hd)
-    v: jax.Array
-
-    @property
-    def n(self) -> int:
-        return len(self.pages)
-
-
-class PimOpQueue:
-    """Deferred queue of arena mutations, flushed as coalesced launches."""
-
-    KIND_ORDER = ("page_copy", "page_init", "kv_write")
-
-    def __init__(self, *, use_pallas: bool = False) -> None:
-        self.use_pallas = use_pallas
-        self._kinds: Dict[str, FlushFn] = {}
-        self._pending: Dict[str, list] = {}
-        self.stats = {
-            "launches": 0,            # kernel dispatches issued (total)
-            "flushes": 0,             # flush() calls that launched anything
-            "ops_enqueued": 0,        # logical ops collected
-            "ops_coalesced": 0,       # logical ops folded into launches
-        }
-        self.launches_by_kind: Dict[str, int] = {}
-        for kind, fn in (("page_copy", _flush_page_copy),
-                         ("page_init", _flush_page_init),
-                         ("kv_write", _flush_kv_write)):
-            self.register_kind(kind, fn)
-
-    # -- extension registry (mirrors MemoryController.register_sequence) -- #
-
-    def register_kind(self, kind: str, fn: FlushFn) -> None:
-        self._kinds[kind] = fn
-        self._pending.setdefault(kind, [])
-        self.launches_by_kind.setdefault(kind, 0)
-
-    def has_kind(self, kind: str) -> bool:
-        return kind in self._kinds
-
-    # -- enqueue -------------------------------------------------------- #
-
-    def enqueue(self, kind: str, op, n_ops: int = 1) -> None:
-        if kind not in self._kinds:
-            raise KeyError(f"unknown PiM op kind {kind!r}")
-        self._pending[kind].append(op)
-        self.stats["ops_enqueued"] += n_ops
-
-    def enqueue_copy(self, src_page: int, dst_page: int) -> None:
-        self.enqueue("page_copy", (src_page, dst_page))
-
-    def enqueue_init(self, page: int, value: float = 0.0) -> None:
-        self.enqueue("page_init", (page, float(value)))
-
-    def enqueue_kv_write(self, page: int, slot: int,
-                         k: jax.Array, v: jax.Array) -> None:
-        """Single token: k/v (layers, ...)."""
-        self.enqueue_kv_writes([page], [slot],
-                               jnp.asarray(k)[:, None], jnp.asarray(v)[:, None])
-
-    def enqueue_kv_writes(self, pages, slots, k: jax.Array,
-                          v: jax.Array) -> None:
-        """Bulk form: pages/slots length-B, k/v (layers, B, ...) — stored
-        stacked; no per-token host work.  An empty batch (e.g. a prompt
-        fully covered by a shared prefix) enqueues nothing, so the
-        launch counters only ever count real dispatches."""
-        if len(pages) == 0:
-            return
-        batch = KVWriteBatch([int(p) for p in pages], [int(s) for s in slots],
-                             k, v)
-        self.enqueue("kv_write", batch, n_ops=batch.n)
-
-    # -- flush ---------------------------------------------------------- #
-
-    @property
-    def pending_ops(self) -> int:
-        return sum(len(v) for v in self._pending.values())
-
-    def _count_launch(self, kind: str, n: int = 1) -> None:
-        self.stats["launches"] += n
-        self.launches_by_kind[kind] += n
-
-    def count_external(self, kind: str, n: int = 1) -> None:
-        """Account kernel dispatches issued outside the queue (e.g. the
-        engine's fused decode step) so launch counters stay the single
-        source of truth for per-round dispatch regressions."""
-        self.launches_by_kind.setdefault(kind, 0)
-        self._count_launch(kind, n)
-
-    def flush(self, *arenas: jax.Array) -> Tuple[jax.Array, ...]:
-        """Drain the queue: one coalesced launch per op kind per arena.
-
-        Returns the updated arenas (a tuple matching the input arity).
-        Launch count per flush is bounded by ``len(arenas) *
-        len(KIND_ORDER)`` no matter how many layers or sequences the
-        pending ops span.
-        """
-        if self.pending_ops == 0:
-            return arenas
-        any_launch = False
-        order = [k for k in self.KIND_ORDER if k in self._kinds]
-        order += [k for k in self._kinds if k not in order]
-        for kind in order:
-            ops = self._pending[kind]
-            if not ops:
-                continue
-            self._pending[kind] = []
-            arenas = self._kinds[kind](self, arenas, ops)
-            # logical ops, matching ops_enqueued (a KVWriteBatch record
-            # carries .n token writes)
-            self.stats["ops_coalesced"] += sum(getattr(o, "n", 1) for o in ops)
-            any_launch = True
-        if any_launch:
-            self.stats["flushes"] += 1
-        return arenas
-
-
-# ---------------------------------------------------------------------- #
-# Built-in flush executors
-# ---------------------------------------------------------------------- #
-
-
-def _flush_page_copy(q: PimOpQueue, arenas, ops):
-    src = jnp.asarray([s for s, _ in ops], jnp.int32)
-    dst = jnp.asarray([d for _, d in ops], jnp.int32)
-    arenas = tuple(rc_ops.pim_page_copy_batched(a, src, dst,
-                                                use_pallas=q.use_pallas)
-                   for a in arenas)
-    q._count_launch("page_copy", len(arenas))
-    return arenas
-
-
-def _flush_page_init(q: PimOpQueue, arenas, ops):
-    # ops: (page, value) records; one launch per arena per distinct value
-    # (in practice a single 0.0 group — the calloc analogue)
-    by_value: Dict[float, List[int]] = {}
-    for page, value in ops:
-        by_value.setdefault(value, []).append(page)
-    for value, pages in by_value.items():
-        dst = jnp.asarray(pages, jnp.int32)
-        arenas = tuple(rc_ops.pim_page_init_batched(a, dst, value,
-                                                    use_pallas=q.use_pallas)
-                       for a in arenas)
-        q._count_launch("page_init", len(arenas))
-    return arenas
-
-
-def _flush_kv_write(q: PimOpQueue, arenas, ops: List[KVWriteBatch]):
-    assert len(arenas) == 2, "kv_write flushes a (k, v) arena pair"
-    k_arena, v_arena = arenas
-    pages = jnp.asarray([p for o in ops for p in o.pages], jnp.int32)
-    slots = jnp.asarray([s for o in ops for s in o.slots], jnp.int32)
-    if len(ops) == 1:              # the common case: already stacked
-        k_new, v_new = ops[0].k, ops[0].v
-    else:
-        k_new = jnp.concatenate([o.k for o in ops], axis=1)  # (L, B, ...)
-        v_new = jnp.concatenate([o.v for o in ops], axis=1)
-    k_arena = rc_ops.pim_kv_scatter(k_arena, pages, slots,
-                                    k_new.astype(k_arena.dtype),
-                                    use_pallas=q.use_pallas)
-    v_arena = rc_ops.pim_kv_scatter(v_arena, pages, slots,
-                                    v_new.astype(v_arena.dtype),
-                                    use_pallas=q.use_pallas)
-    q._count_launch("kv_write", 2)
-    return (k_arena, v_arena)
+__all__ = ["FlushFn", "KVWriteBatch", "PimOpQueue"]

@@ -103,19 +103,46 @@ class TestGradCompression:
 
 class TestTpuPimolib:
     def test_arena_copy_init_rand(self):
-        from repro.core import make_tpu_arena, TpuLib, Blocking
+        from repro.core import make_tpu_arena, TpuLib, Blocking, OpReceipt
         arena = make_tpu_arena(num_slabs=2, pages_per_slab=8, page_elems=64,
                                dtype=jnp.float32)
         lib = TpuLib(arena)
         src, dst = arena.allocator.alloc_copy_pair(2)
         vals = jnp.arange(2 * 64, dtype=jnp.float32).reshape(2, 64)
-        lib.write_pages(src, vals)
-        lib.copy_pages(src, dst, blocking=Blocking.FIN)
-        np.testing.assert_array_equal(np.asarray(lib.read_pages(dst)), vals)
-        lib.init_pages(dst, 0.0, blocking=Blocking.FIN)
-        assert float(jnp.abs(lib.read_pages(dst)).sum()) == 0.0
-        r = lib.rand(jnp.asarray([1, 2], jnp.uint32), 4, 16)
+        rec = lib.write(src, vals)
+        assert isinstance(rec, OpReceipt) and rec.ok and rec.face == "jax"
+        rec = lib.copy(src, dst, blocking=Blocking.FIN)
+        assert rec.op == "rowclone_copy" and rec.n_ops == 2 and rec.launches >= 1
+        np.testing.assert_array_equal(np.asarray(lib.read(dst)), vals)
+        rec = lib.init(dst, 0.0, blocking=Blocking.FIN)
+        assert rec.op == "rowclone_init" and rec.launches >= 1
+        assert float(jnp.abs(lib.read(dst)).sum()) == 0.0
+        r = lib.rand_u32(jnp.asarray([1, 2], jnp.uint32), 4, 16)
         assert r.shape == (4, 16) and r.dtype == jnp.uint32
+        bits, rec = lib.rand(48)
+        assert bits.shape == (48,) and set(np.unique(bits)) <= {0, 1}
+        assert rec.op == "drange_rand" and rec.n_ops == 48
+        # logical bits, exactly as DeviceLib counts them (no rounding to
+        # whole words); rand_u32 counts its raw words separately
+        assert lib.stats["rand_bits"] == 4 * 16 * 32 + 48
+        # logical-op stats stay consistent with the queue's accounting
+        assert lib.stats["copies"] == 2 and lib.stats["inits"] == 2
+        assert lib.stats["writes"] == 2 and lib.stats["reads"] == 4
+        assert lib.queue.stats["ops_enqueued"] == lib.queue.stats["ops_coalesced"] == 4
+
+    def test_v1_aliases_still_work(self):
+        from repro.core import make_tpu_arena, TpuLib, Blocking
+        arena = make_tpu_arena(num_slabs=1, pages_per_slab=4, page_elems=8,
+                               dtype=jnp.float32)
+        lib = TpuLib(arena)
+        src, dst = arena.allocator.alloc_copy_pair(1)
+        with pytest.deprecated_call():
+            lib.write_pages(src, jnp.full((1, 8), 3.0))
+        with pytest.deprecated_call():
+            lib.copy_pages(src, dst, blocking=Blocking.FIN)
+        with pytest.deprecated_call():
+            np.testing.assert_array_equal(np.asarray(lib.read_pages(dst)),
+                                          np.full((1, 8), 3.0, np.float32))
 
     def test_same_slab_constraint_enforced(self):
         from repro.core import make_tpu_arena, TpuLib
@@ -125,27 +152,29 @@ class TestTpuPimolib:
         a = arena.allocator.alloc(1, group=0)
         b = arena.allocator.alloc(1, group=1)
         with pytest.raises(ValueError):
-            lib.copy_pages(a, b)
+            lib.copy(a, b)
 
     def test_deferred_ops_coalesce_to_one_launch(self):
         # TpuLib routes through the batched PiM op scheduler: deferred
-        # mode folds N copy_pages calls into ONE coalesced launch
+        # mode folds N copy calls into ONE coalesced launch
         from repro.core import make_tpu_arena, TpuLib, Blocking
         arena = make_tpu_arena(num_slabs=2, pages_per_slab=8, page_elems=64,
                                dtype=jnp.float32)
         lib = TpuLib(arena, deferred=True)
         pairs = [arena.allocator.alloc_copy_pair(1) for _ in range(3)]
         for i, (src, _) in enumerate(pairs):
-            lib.write_pages(src, jnp.full((1, 64), float(i + 1)))
+            lib.write(src, jnp.full((1, 64), float(i + 1)))
         for src, dst in pairs:
-            lib.copy_pages(src, dst)
+            rec = lib.copy(src, dst)
+            assert rec.deferred and rec.launches == 0
         assert lib.queue.launches_by_kind["page_copy"] == 0  # still queued
         assert lib.stats["copies"] == 3
-        lib.flush(Blocking.FIN)
+        rec = lib.flush(Blocking.FIN)
         assert lib.queue.launches_by_kind["page_copy"] == 1  # one launch
+        assert rec.launches == 1
         for i, (_, dst) in enumerate(pairs):
             np.testing.assert_array_equal(
-                np.asarray(lib.read_pages(dst)),
+                np.asarray(lib.read(dst)),
                 np.full((1, 64), i + 1, np.float32))
 
 

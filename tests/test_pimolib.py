@@ -1,0 +1,400 @@
+"""pimolib v2: one PimLib protocol over both faces.
+
+Cross-face parity (the same trace through DeviceLib and TpuLib yields
+identical page contents and unified OpReceipts), the opcode-keyed op
+registry (capability flags, one-entry extensibility), the hazard-aware
+deferred path now living in PimOpQueue, caller-supplied libs on the
+serving cache, and model-face replay of a recorded serving trace."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Blocking, DRAMGeometry, DeviceLib, MemoryController,
+                        Opcode, OpReceipt, PimLib, PimOpQueue,
+                        PimOpsController, SimulatedDRAM, TpuLib,
+                        allocator_from_subarray_map, discover_subarrays,
+                        make_tpu_arena)
+from repro.core import op_registry
+
+ROW_BYTES = 64   # small device rows so the parity payload is exact in fp32
+
+
+def _device_lib() -> DeviceLib:
+    dev = SimulatedDRAM(DRAMGeometry(num_subarrays=2, rows_per_subarray=8,
+                                     row_bytes=ROW_BYTES))
+    mc = MemoryController(dev)
+    smap = discover_subarrays(mc, max_rows=16)
+    return DeviceLib(PimOpsController(mc), allocator_from_subarray_map(smap))
+
+
+def _jax_lib() -> TpuLib:
+    arena = make_tpu_arena(num_slabs=2, pages_per_slab=8,
+                           page_elems=ROW_BYTES, dtype=jnp.float32)
+    return TpuLib(arena)
+
+
+def _drive(lib: PimLib, payload: np.ndarray):
+    """The shared trace: alloc, write, copy, re-init the source, read.
+    Pure PimLib protocol — no face-specific calls."""
+    src, dst = lib.allocator.alloc_copy_pair(2)
+    receipts = [
+        lib.write(src, payload),
+        lib.copy(src, dst, blocking=Blocking.FIN),
+        lib.init(src, 0.0, blocking=Blocking.FIN),
+    ]
+    receipts.append(lib.flush(Blocking.FIN))
+    dst_vals = np.asarray(lib.read(dst), np.float32)
+    src_vals = np.asarray(lib.read(src), np.float32)
+    return dst_vals, src_vals, receipts
+
+
+class TestCrossFaceParity:
+    def test_same_trace_same_contents(self):
+        payload = np.random.default_rng(3).integers(
+            0, 256, (2, ROW_BYTES)).astype(np.uint8)
+        d_dst, d_src, d_recs = _drive(_device_lib(), payload)
+        j_dst, j_src, j_recs = _drive(_jax_lib(),
+                                      payload.astype(np.float32))
+        np.testing.assert_array_equal(d_dst.astype(np.float32), j_dst)
+        np.testing.assert_array_equal(d_src, np.zeros_like(d_src))
+        np.testing.assert_array_equal(j_src, np.zeros_like(j_src))
+
+    def test_receipts_unified_across_faces(self):
+        payload = np.ones((2, ROW_BYTES), np.uint8)
+        _, _, d_recs = _drive(_device_lib(), payload)
+        _, _, j_recs = _drive(_jax_lib(), payload.astype(np.float32))
+        for d, j in zip(d_recs, j_recs):
+            assert isinstance(d, OpReceipt) and isinstance(j, OpReceipt)
+            assert d.ok and j.ok
+            assert d.face == "device" and j.face == "jax"
+            assert d.n_ops == j.n_ops
+        # op names unify where the registry defines the op on both faces
+        assert d_recs[1].op == j_recs[1].op == "rowclone_copy"
+        assert d_recs[2].op == j_recs[2].op == "rowclone_init"
+        # each face fills its own accounting column
+        assert d_recs[1].latency_ns > 0 and d_recs[1].launches == 0
+        assert j_recs[1].launches >= 1 and j_recs[1].latency_ns == 0.0
+        # model-face RowClone beats the CPU baseline end to end
+        dev = _device_lib()
+        src, dst = dev.allocator.alloc_copy_pair(2)
+        assert (dev.cpu_copy(src, dst).latency_ns
+                > 10 * dev.copy(src, dst).latency_ns)
+
+    def test_blocking_fin_synchronizes_both_faces(self):
+        for lib in (_device_lib(), _jax_lib()):
+            src, dst = lib.allocator.alloc_copy_pair(1)
+            rec = lib.copy(src, dst, blocking=Blocking.FIN)
+            assert rec.ok and not rec.deferred
+
+
+class TestOpRegistry:
+    def test_capability_flags(self):
+        dev, tpu = _device_lib(), _jax_lib()
+        assert dev.supports(Opcode.RC_COPY) and tpu.supports(Opcode.RC_COPY)
+        assert dev.supports(Opcode.RC_INIT) and tpu.supports(Opcode.RC_INIT)
+        # KV scatter has no DDR3 command sequence: model face says no
+        assert not dev.supports(Opcode.KV_WRITE)
+        assert tpu.supports(Opcode.KV_WRITE)
+        # D-RaNGe: direct-dispatch kernel on the JAX face; the model
+        # face needs a characterized TRNG attached first
+        assert tpu.supports(Opcode.DR_GEN)
+        assert not dev.supports(Opcode.DR_GEN)
+
+    def test_queue_kinds_come_from_registry(self):
+        q = PimOpQueue()
+        kinds = [s.jax_kind for s in op_registry.ops_for_face(op_registry.FACE_JAX)
+                 if s.jax_kind is not None]   # jax_direct ops have no kind
+        assert kinds, "registry should contribute queue kinds"
+        for kind in kinds:
+            assert q.has_kind(kind)
+
+    def test_register_new_op_reaches_new_queues(self):
+        opcode = Opcode.NOP   # reuse a spare opcode for the test entry
+        assert op_registry.get_op(opcode) is None
+
+        def _flush_touch(q, arenas, ops):
+            q._count_launch("touch", len(arenas))
+            return arenas
+
+        spec = op_registry.PimOpSpec(opcode=opcode, name="touch",
+                                     jax_kind="touch",
+                                     jax_flush=_flush_touch)
+        op_registry.register_pim_op(spec)
+        try:
+            with pytest.raises(ValueError):
+                op_registry.register_pim_op(spec)   # no silent override
+            q = PimOpQueue()
+            assert q.has_kind("touch")
+            q.enqueue("touch", ("x",))
+            (out,) = q.flush(jnp.zeros((1, 2, 2)))
+            assert q.launches_by_kind["touch"] == 1
+            # jax-face libs see the new op through the capability flag
+            assert _jax_lib().supports(opcode)
+            assert not _device_lib().supports(opcode)
+        finally:
+            del op_registry._REGISTRY[opcode]
+
+    def test_device_unsupported_op_raises(self):
+        dev = _device_lib()
+        with pytest.raises(NotImplementedError):
+            dev.rand(8)    # no TRNG attached
+        src, dst = dev.allocator.alloc_copy_pair(1)
+        with pytest.raises(ValueError):
+            dev.init(dst, 0.5)    # non-byte fill cannot match the JAX face
+        with pytest.raises(ValueError):
+            dev.write(src, np.full((1, ROW_BYTES), 300.0))  # no truncation
+        with pytest.raises(TypeError):
+            dev.init(dst, Blocking.FIN)   # v1 positional signature
+
+    def test_nonzero_byte_fill_matches_across_faces(self):
+        dev, tpu = _device_lib(), _jax_lib()
+        for lib in (dev, tpu):
+            dst = lib.allocator.alloc(2)
+            rec = lib.init(dst, 7.0, blocking=Blocking.FIN)
+            assert rec.ok
+            np.testing.assert_array_equal(
+                np.asarray(lib.read(dst), np.float32),
+                np.full((2, ROW_BYTES), 7.0, np.float32))
+
+    def test_multi_buffer_read_write_roundtrip(self):
+        from repro.core import SubarrayAllocator
+        from repro.core.allocator import arena_groups
+        k = jnp.zeros((2, 8, 4), jnp.float32)   # (layers, pages, elems)
+        v = jnp.zeros((2, 8, 4), jnp.float32)
+        lib = TpuLib(buffers=[k, v], layered=True,
+                     allocator=SubarrayAllocator(arena_groups(1, 8)))
+        alloc = lib.allocator.alloc(2)
+        vals = jnp.arange(2 * 2 * 4, dtype=jnp.float32).reshape(2, 2, 4)
+        lib.write(alloc, vals, buffer=1)
+        np.testing.assert_array_equal(np.asarray(lib.read(alloc, buffer=1)),
+                                      np.asarray(vals))
+        assert float(jnp.abs(lib.read(alloc, buffer=0)).sum()) == 0.0
+
+    def test_poc_rejects_unregistered_opcode(self):
+        from repro.core import Instruction
+        dev = _device_lib()
+        dev.poc.store_instruction(Instruction(Opcode.KV_WRITE, 0, 0).encode())
+        with pytest.raises(ValueError):
+            dev.poc.store_start()
+
+
+class TestHazardAwareQueue:
+    """The deferred-coalescing hazard logic now lives in PimOpQueue
+    (dispatch-count regression for the admit() path)."""
+
+    @staticmethod
+    def _lib():
+        return TpuLib(make_tpu_arena(1, 16, 8, dtype=jnp.float32),
+                      deferred=True)
+
+    def test_disjoint_same_kind_ops_coalesce(self):
+        lib = self._lib()
+        pairs = [lib.allocator.alloc_copy_pair(1) for _ in range(4)]
+        for src, dst in pairs:
+            lib.copy(src, dst)
+        lib.flush()
+        assert lib.queue.launches_by_kind["page_copy"] == 1
+        assert lib.queue.stats["hazard_flushes"] == 0
+
+    def test_shared_source_fanout_copies_still_coalesce(self):
+        # reading the same source row twice is no hazard: batched copies
+        # read the pre-flush arena state
+        lib = self._lib()
+        a = lib.allocator.alloc(1)
+        b = lib.allocator.alloc(1, same_group_as=a)
+        c = lib.allocator.alloc(1, same_group_as=a)
+        lib.write(a, jnp.full((1, 8), 9.0))
+        lib.copy(a, b)
+        lib.copy(a, c)
+        lib.flush(Blocking.FIN)
+        assert lib.queue.stats["hazard_flushes"] == 0
+        assert lib.queue.launches_by_kind["page_copy"] == 1
+        assert float(np.asarray(lib.read(c))[0, 0]) == 9.0
+
+    def test_row_reuse_flushes_backlog_and_chains(self):
+        lib = self._lib()
+        a = lib.allocator.alloc(1)
+        b = lib.allocator.alloc(1, same_group_as=a)
+        c = lib.allocator.alloc(1, same_group_as=a)
+        lib.write(a, jnp.full((1, 8), 5.0))
+        lib.copy(a, b)
+        lib.copy(b, c)            # reads b -> hazard -> backlog flushes
+        lib.flush(Blocking.FIN)
+        assert float(np.asarray(lib.read(c))[0, 0]) == 5.0
+        assert lib.queue.stats["hazard_flushes"] == 1
+        assert lib.queue.launches_by_kind["page_copy"] == 2
+
+    def test_default_seed_rand_advances_per_call(self):
+        lib = self._lib()
+        a, _ = lib.rand(128)
+        b, _ = lib.rand(128)
+        assert (a != b).any()          # fresh bits per call, like the POC
+        c1, _ = lib.rand(128, seed=jnp.asarray([1, 2], jnp.uint32))
+        c2, _ = lib.rand(128, seed=jnp.asarray([1, 2], jnp.uint32))
+        np.testing.assert_array_equal(c1, c2)   # explicit seed reproduces
+
+    def test_kind_mix_flushes_backlog(self):
+        lib = self._lib()
+        src, dst = lib.allocator.alloc_copy_pair(1)
+        other = lib.allocator.alloc(1)
+        lib.copy(src, dst)
+        lib.init(other)           # different kind -> hazard flush
+        lib.flush()
+        assert lib.queue.stats["hazard_flushes"] == 1
+        assert lib.queue.launches_by_kind["page_copy"] == 1
+        assert lib.queue.launches_by_kind["page_init"] == 1
+
+
+class TestServingIntegration:
+    @pytest.fixture(scope="class")
+    def model(self):
+        from repro.configs import ARCHS, reduced
+        from repro.models import transformer as T
+        from repro.models.params import init_params
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_cache_runs_against_caller_supplied_lib(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cfg, _ = model
+        lib = TpuLib(deferred=True)
+        cache = PagedKVCache(cfg, num_pages=32, page_size=4, lib=lib)
+        assert cache.lib is lib and cache.queue is lib.queue
+        cache.create(0, 10)
+        base = lib.queue.stats["launches"]
+        cache.fork(0, 1)
+        assert lib.queue.stats["launches"] - base == 2   # 1/arena (k, v)
+        cache.free(0)
+        cache.free(1)
+        assert float(jnp.abs(cache.k_arena).sum()) == 0.0
+
+    def test_cache_rejects_model_face_lib(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cfg, _ = model
+        with pytest.raises(ValueError):
+            PagedKVCache(cfg, num_pages=32, page_size=4, lib=_device_lib())
+
+    def test_external_deferred_backlog_flushes_before_cache_copy(self, model):
+        """A shared deferred lib's pending init on a page must land
+        before the cache RowClone-copies that page (KIND_ORDER would
+        otherwise replay the copy first)."""
+        from repro.serving.kv_cache import PagedKVCache
+        cfg, _ = model
+        lib = TpuLib(deferred=True)
+        cache = PagedKVCache(cfg, num_pages=32, page_size=4, lib=lib)
+        seq = cache.create(0, 6)       # pages[1] is a partial tail
+        k = jnp.ones((cache.n_layers, 6, cfg.num_kv_heads,
+                      cfg.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        tail = seq.pages[-1]
+        # an external client defers a zeroing init of the tail page
+        lib.init(cache.page_alloc[tail])
+        assert lib.queue.pending_ops == 1
+        # forking CoW-copies the partial tail: the init must land first
+        forked = cache.fork(0, 1)
+        assert lib.queue.stats["hazard_flushes"] >= 1
+        page = np.asarray(cache.k_arena[:, forked.pages[-1]], np.float32)
+        assert float(np.abs(page).sum()) == 0.0   # copied the zeroed page
+
+    def test_lib_refuses_second_arena_owner(self, model):
+        # rebinding a bound lib would flush the first cache's page ids
+        # against the second cache's arenas — refuse instead
+        from repro.serving.kv_cache import PagedKVCache
+        cfg, _ = model
+        lib = TpuLib(deferred=True)
+        PagedKVCache(cfg, num_pages=32, page_size=4, lib=lib)
+        with pytest.raises(RuntimeError):
+            PagedKVCache(cfg, num_pages=16, page_size=4, lib=lib)
+
+    def test_queue_refuses_second_lib(self):
+        # pending ops carry no owner, so two libs flushing one queue
+        # would land each other's ops on the wrong arenas — refuse
+        lib1 = TpuLib(deferred=True)
+        with pytest.raises(ValueError):
+            TpuLib(deferred=True, queue=lib1.queue)
+
+    def test_engine_with_caller_supplied_lib_matches_default(self, model, rng):
+        from repro.serving.engine import PagedEngine, Request
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+        outs = []
+        libs = [None, TpuLib(deferred=True)]
+        for lib in libs:
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=64, lib=lib)
+            eng.submit(Request(0, prompt, max_new_tokens=3, temperature=0.0))
+            outs.append(tuple(eng.run()[0]))
+            assert eng.cache.queue.launches_by_kind["fused_decode"] >= 1
+        assert outs[0] == outs[1]
+        # the supplied lib shares the engine's dispatch accounting
+        assert libs[1].queue.stats["launches"] > 0
+
+
+class TestTraceReplay:
+    @pytest.fixture(scope="class")
+    def model(self):
+        from repro.configs import ARCHS, reduced
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+        return cfg
+
+    def test_cache_trace_records_coalesced_batches(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cache = PagedKVCache(model, num_pages=32, page_size=4,
+                             record_trace=True)
+        seq = cache.create(0, 10)       # 2 full pages + partial tail
+        k = jnp.ones((cache.n_layers, 10, model.num_kv_heads,
+                      model.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        cache.fork(0, 1)                # 1 CoW copy
+        cache.free(0)
+        cache.free(1)
+        counts = cache.trace.counts()
+        assert counts["page_copy"] == 1
+        assert counts["kv_write"] == 10
+        assert counts["page_init"] == 4          # 3 + the CoW'd tail
+        # one event per kind per flush: the free()s batch their inits
+        kinds = [e.kind for e in cache.trace.events]
+        assert kinds.count("page_copy") == 1
+
+    def test_replay_on_device_yields_rowclone_vs_cpu_totals(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        from repro.serving.trace import replay_on_device
+        cache = PagedKVCache(model, num_pages=16, page_size=4, num_slabs=2,
+                             record_trace=True)
+        seq = cache.create(0, 10)
+        k = jnp.ones((cache.n_layers, 10, model.num_kv_heads,
+                      model.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        cache.fork(0, 1)
+        cache.free(0)
+        cache.free(1)
+        rep = replay_on_device(cache.trace)
+        assert rep["events"] == len(cache.trace.events)
+        assert all(r.ok for r in rep["receipts"])
+        assert any(r.op == "rowclone_copy" for r in rep["receipts"])
+        # paper-style accounting: RowClone beats the all-CPU baseline
+        assert rep["pim_ns"]["rowclone_init"] > 0
+        assert rep["speedup"]["init"] > 5
+        assert rep["speedup"]["copy"] is None or rep["speedup"]["copy"] > 5
+        assert rep["cpu_ns"]["total"] > rep["pim_ns"]["total"]
+
+    @pytest.mark.slow
+    def test_engine_trace_end_to_end(self, model, rng):
+        from repro.models import transformer as T
+        from repro.models.params import init_params
+        from repro.serving.engine import PagedEngine, Request
+        from repro.serving.trace import replay_on_device
+        params = init_params(T.model_defs(model), jax.random.PRNGKey(0))
+        eng = PagedEngine(model, params, page_size=4, num_pages=32,
+                          record_trace=True)
+        prompt = rng.integers(0, model.vocab_size, 9).astype(np.int32)
+        eng.submit(Request(0, prompt, max_new_tokens=4, temperature=0.0))
+        eng.run()
+        counts = eng.cache.trace.counts()
+        assert counts["kv_write"] > 0 and counts["page_init"] > 0
+        rep = replay_on_device(eng.cache.trace)
+        assert rep["speedup"]["init"] > 1
+        assert rep["pim_ns"]["total"] < rep["cpu_ns"]["total"]
