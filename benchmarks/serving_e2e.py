@@ -1,5 +1,5 @@
 """End-to-end serving comparison (paper's system-level claim, transposed
-to the TPU framework), two tables:
+to the TPU framework), three tables:
 
 1. RowClone-backed paged KV management (CoW fork + prefix sharing +
    pim_init page recycling) vs a naive engine that re-prefills shared
@@ -9,6 +9,11 @@ to the TPU framework), two tables:
    in-kernel self-token merge, in-jit scatter + sampling) vs the
    pre-fusion eager layer loop: decode tokens/s, kernel dispatches per
    round, and jit retrace counts.
+
+3. Fused bucketed prefill (one jitted dispatch per length-bucket batch,
+   length-masked flash attention, in-jit KV scatter) vs the eager
+   per-request path (un-jitted ``T.forward`` per prompt): prefill
+   tokens/s, time-to-first-token for the batch, and prefill jit traces.
 
 Metrics print as ``name,us_per_call,derived`` CSV and the fusion numbers
 are also written to ``BENCH_serving.json`` so CI tracks them per PR.
@@ -83,6 +88,44 @@ def _decode_throughput(cfg, params, rng, *, fused: bool, n_reqs: int,
     }
 
 
+def _prefill_throughput(cfg, params, rng, *, fused_prefill: bool,
+                        n_reqs: int, lengths, page_size: int):
+    """Prefill tokens/s + time-to-first-token for one prefill mode.
+
+    Warmup batch first (the fused path pays one jit trace per distinct
+    length bucket), then a timed batch on the same engine: the clock
+    covers exactly the prefill round — when it returns, every request
+    in the batch has its first token, so the elapsed time IS the
+    batch's time-to-first-token.
+    """
+    eng = PagedEngine(cfg, params, page_size=page_size, num_pages=256,
+                      fused_prefill=fused_prefill)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths for _ in range(n_reqs)]
+    for i, p in enumerate(prompts):                       # warmup batch
+        eng.submit(Request(i, p, max_new_tokens=1, temperature=0.0))
+    eng.run()
+    for i, p in enumerate(prompts):                       # timed batch
+        eng.submit(Request(len(prompts) + i, p, max_new_tokens=1,
+                           temperature=0.0))
+    before = dict(eng.cache.queue.launches_by_kind)
+    t0 = time.perf_counter()
+    eng._prefill_round()
+    ttft = time.perf_counter() - t0
+    after = eng.cache.queue.launches_by_kind
+    launches = {k: after[k] - before.get(k, 0) for k in after
+                if after[k] - before.get(k, 0)}
+    toks = sum(len(p) for p in prompts)
+    eng.run()                                             # drain
+    return {
+        "tok_s": toks / ttft if ttft > 0 else float("inf"),
+        "ttft_ms": ttft * 1e3,
+        "prefill_tokens": toks,
+        "launches_by_kind": launches,
+        "prefill_jit_traces": eng.stats["prefill_jit_traces"],
+    }
+
+
 def main(out=sys.stdout, smoke: bool = False):
     print("name,us_per_call,derived", file=out)
     cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
@@ -137,8 +180,22 @@ def main(out=sys.stdout, smoke: bool = False):
           file=out)
     print(f"decode_fusion_speedup,0,{speedup:.2f}x", file=out)
 
+    # ---- table 3: fused bucketed prefill vs eager per-request path ----- #
+    pre = dict(n_reqs=(2 if smoke else 4), lengths=(16, 32), page_size=4)
+    pstats = _prefill_throughput(cfg, params, rng, fused_prefill=True, **pre)
+    qstats = _prefill_throughput(cfg, params, rng, fused_prefill=False, **pre)
+    pspeed = pstats["tok_s"] / qstats["tok_s"]
+    print(f"prefill_fused,{1e6/max(pstats['tok_s'],1e-9):.0f},"
+          f"tok_s={pstats['tok_s']:.1f};ttft_ms={pstats['ttft_ms']:.1f}"
+          f";jit_traces={pstats['prefill_jit_traces']}", file=out)
+    print(f"prefill_eager,{1e6/max(qstats['tok_s'],1e-9):.0f},"
+          f"tok_s={qstats['tok_s']:.1f};ttft_ms={qstats['ttft_ms']:.1f}",
+          file=out)
+    print(f"prefill_fusion_speedup,0,{pspeed:.2f}x", file=out)
+
     bench = {
-        "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec},
+        "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec,
+                   "prefill": pre},
         "decode_tok_s_fused": round(fstats["tok_s"], 2),
         "decode_tok_s_eager": round(estats["tok_s"], 2),
         "decode_fusion_speedup": round(speedup, 2),
@@ -150,6 +207,16 @@ def main(out=sys.stdout, smoke: bool = False):
         "launches_by_kind_per_round_eager": estats["launches_by_kind_per_round"],
         "jit_traces_fused": fstats["jit_traces"],
         "decoded_tokens": fstats["decoded_tokens"],
+        # fused bucketed prefill vs the eager per-request oracle
+        "prefill_tok_s_fused": round(pstats["tok_s"], 2),
+        "prefill_tok_s_eager": round(qstats["tok_s"], 2),
+        "prefill_fusion_speedup": round(pspeed, 2),
+        "prefill_ttft_ms_fused": round(pstats["ttft_ms"], 3),
+        "prefill_ttft_ms_eager": round(qstats["ttft_ms"], 3),
+        "prefill_launches_by_kind_fused": pstats["launches_by_kind"],
+        "prefill_launches_by_kind_eager": qstats["launches_by_kind"],
+        "prefill_jit_traces_fused": pstats["prefill_jit_traces"],
+        "prefill_tokens": pstats["prefill_tokens"],
     }
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     with open(path, "w") as f:

@@ -70,6 +70,7 @@ class PimOpQueue:
             "ops_enqueued": 0,        # logical ops collected
             "ops_coalesced": 0,       # logical ops folded into launches
             "hazard_flushes": 0,      # admit() flushes forced by hazards
+            "overlap_flushes": 0,     # backlogs dispatched early to overlap
         }
         self.launches_by_kind: Dict[str, int] = {}
         # optional PimTrace sink (duck-typed: record_from_queue(kind, ops))
@@ -169,10 +170,27 @@ class PimOpQueue:
 
     def count_external(self, kind: str, n: int = 1) -> None:
         """Account kernel dispatches issued outside the queue (e.g. the
-        engine's fused decode step) so launch counters stay the single
-        source of truth for per-round dispatch regressions."""
+        engine's fused decode step, or the fused prefill batch's in-jit
+        KV scatter) so launch counters stay the single source of truth
+        for per-round dispatch regressions."""
         self.launches_by_kind.setdefault(kind, 0)
         self._count_launch(kind, n)
+
+    def flush_overlapped(self, flush: Callable[[], None]) -> bool:
+        """Dispatch the pending backlog NOW so its device-side work runs
+        behind upcoming host-side work (JAX dispatch is asynchronous).
+        The serving engine calls this with the coming round's CoW copy
+        backlog before assembling and tracing the prefill batch, so
+        forking workloads pay the coalesced copy flush during prefill
+        host work instead of stalling the decode step.  Returns whether
+        anything was dispatched (counted in ``stats["overlap_flushes"]``
+        — the launches themselves are accounted by the flush as usual).
+        """
+        if self.pending_ops == 0:
+            return False
+        flush()
+        self.stats["overlap_flushes"] += 1
+        return True
 
     def flush(self, *arenas: jax.Array) -> Tuple[jax.Array, ...]:
         """Drain the queue: one coalesced launch per op kind per arena.

@@ -540,31 +540,6 @@ class TpuLib(PimLib):
         return dr_ops.pim_random_u32(seed, n_rows, n_cols,
                                      use_pallas=self.use_pallas)
 
-    # -- deprecated v1 spellings ------------------------------------------ #
-
-    def _deprecated(self, old: str, new: str) -> None:
-        warnings.warn(f"TpuLib.{old} is deprecated: use {new} "
-                      "(pimolib v2 protocol)", DeprecationWarning,
-                      stacklevel=3)
-
-    def copy_pages(self, src: Allocation, dst: Allocation,
-                   blocking: Blocking = Blocking.ACK) -> OpReceipt:
-        self._deprecated("copy_pages", "copy")
-        return self.copy(src, dst, blocking)
-
-    def init_pages(self, dst: Allocation, value=0.0,
-                   blocking: Blocking = Blocking.ACK) -> OpReceipt:
-        self._deprecated("init_pages", "init")
-        return self.init(dst, value, blocking)
-
-    def read_pages(self, alloc: Allocation) -> jax.Array:
-        self._deprecated("read_pages", "read")
-        return self.read(alloc)
-
-    def write_pages(self, alloc: Allocation, values: jax.Array) -> OpReceipt:
-        self._deprecated("write_pages", "write")
-        return self.write(alloc, values)
-
 
 def make_tpu_arena(num_slabs: int, pages_per_slab: int, page_elems: int,
                    dtype=jnp.bfloat16) -> TpuArena:

@@ -12,6 +12,13 @@ flash-attention recurrence.  Causal masking is applied per-tile from
 global row/col indices.  GQA/MQA is supported by mapping query head h to
 kv head h // group_size in the k/v BlockSpec index maps.
 
+Per-sequence length masking (the fused bucketed-prefill contract): with
+``lengths`` (B,) the kernel additionally masks key columns at or beyond
+``lengths[b]`` — prompts padded up to a power-of-two bucket attend only
+to their real tokens.  ``lengths`` rides in as a scalar-prefetch operand
+(the same mechanism the paged-attention kernel uses for block tables),
+so the mask costs one SMEM read per tile, not a VMEM operand.
+
 Block sizes default to (bq, bk) = (256, 512) with head_dim up to 256:
 q-tile 256x256xf32 (256 KB) + k,v tiles 512x256 (2x512 KB) + acc scratch
 well under the ~16 MiB VMEM budget, MXU-aligned (multiples of 128).
@@ -29,8 +36,14 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  sm_scale: float, causal: bool, bq: int, bk: int, seq_k: int):
+def _flash_kernel(*refs, sm_scale: float, causal: bool, bq: int, bk: int,
+                  seq_k: int, has_lengths: bool):
+    if has_lengths:
+        len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+
+    b = pl.program_id(0)
     i = pl.program_id(2)
     j = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -50,6 +63,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     col = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     mask = col < seq_k                                   # padding mask
+    if has_lengths:
+        mask = mask & (col < len_ref[b])                 # per-sequence length
     if causal:
         row = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         mask = mask & (col <= row)
@@ -76,10 +91,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, sm_scale: float | None = None,
                     block_q: int = 256, block_k: int = 512,
+                    lengths: jax.Array | None = None,
                     interpret: bool = False) -> jax.Array:
     """Fused attention forward.
 
     q: (B, H, Sq, D);  k, v: (B, KVH, Sk, D) with H % KVH == 0.
+    ``lengths``: optional (B,) int32 valid kv lengths — columns at or
+    beyond ``lengths[b]`` are masked (length-padded prefill batches; for
+    well-defined rows every length must be >= 1 under ``causal``).
     Returns (B, H, Sq, D) in q.dtype.
     """
     b, h, sq, d = q.shape
@@ -102,22 +121,49 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     grid = (b, h, pl.cdiv(sq_p, bq), pl.cdiv(sk_p, bk))
 
     kernel = functools.partial(
-        _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bk=bk, seq_k=sk)
+        _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bk=bk,
+        seq_k=sk, has_lengths=lengths is not None)
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)[:, :, :sq]
+    out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+    scratch_shapes = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, d), jnp.float32),
+    ]
+    # index maps shared by both dispatch modes: the trailing *_ absorbs
+    # the scalar-prefetch ref PrefetchScalarGridSpec appends
+    q_map = lambda b_, h_, i, j, *_: (b_, h_, i, 0)           # noqa: E731
+    kv_map = lambda b_, h_, i, j, *_, g=group: (b_, h_ // g, j, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), q_map),
+        pl.BlockSpec((1, 1, bk, d), kv_map),
+        pl.BlockSpec((1, 1, bk, d), kv_map),
+    ]
+    out_specs = pl.BlockSpec((1, 1, bq, d), q_map)
+    if lengths is None:
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(q, k, v)
+    else:
+        # lengths ride as a scalar-prefetch operand (SMEM), the same
+        # mechanism the paged-attention kernel uses for block tables
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(lengths.astype(jnp.int32), q, k, v)
+    return out[:, :, :sq]

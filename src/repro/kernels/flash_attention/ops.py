@@ -1,4 +1,10 @@
-"""Jit'd wrapper for the flash-attention kernel family."""
+"""Jit'd wrapper for the flash-attention kernel family.
+
+``attention`` is the jitted public entry; ``attention_inline`` is the
+same dispatch logic without the jit wrapper, for callers already inside
+a compiled computation (the serving engine's fused prefill step traces
+it inside one outer ``jax.jit``).
+"""
 
 from __future__ import annotations
 
@@ -11,14 +17,26 @@ from . import flash_attention as fa, ref
 _ON_TPU = jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "sm_scale", "block_q", "block_k", "use_pallas", "interpret"))
-def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              causal: bool = True, sm_scale: float | None = None,
-              block_q: int = 256, block_k: int = 512,
-              use_pallas: bool = True, interpret: bool = not _ON_TPU) -> jax.Array:
+def attention_inline(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, sm_scale: float | None = None,
+                     block_q: int = 256, block_k: int = 512,
+                     lengths: jax.Array | None = None,
+                     use_pallas: bool = True,
+                     interpret: bool = not _ON_TPU) -> jax.Array:
+    """Pallas-or-reference dispatch; see the kernel for the contract.
+
+    ``lengths`` (B,) masks key columns at or beyond each sequence's
+    valid length (length-padded prefill batches).
+    """
     if use_pallas:
         return fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
                                   block_q=block_q, block_k=block_k,
-                                  interpret=interpret)
-    return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale)
+                                  lengths=lengths, interpret=interpret)
+    return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                         lengths=lengths)
+
+
+attention = functools.partial(
+    jax.jit, static_argnames=(
+        "causal", "sm_scale", "block_q", "block_k", "use_pallas", "interpret"),
+)(attention_inline)

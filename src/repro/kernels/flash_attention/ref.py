@@ -5,9 +5,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+_NEG_INF = -1e30
+
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              causal: bool = True, sm_scale: float | None = None) -> jax.Array:
+              causal: bool = True, sm_scale: float | None = None,
+              lengths: jax.Array | None = None) -> jax.Array:
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
     group = h // kvh
@@ -16,10 +19,14 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     k = jnp.repeat(k, group, axis=1)
     v = jnp.repeat(v, group, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * sm_scale
+    col = jnp.arange(sk)
+    if lengths is not None:
+        # per-sequence valid-length mask (length-padded prefill batches)
+        s = jnp.where(col[None, None, None, :] < lengths[:, None, None, None],
+                      s, _NEG_INF)
     if causal:
         row = jnp.arange(sq)[:, None]
-        col = jnp.arange(sk)[None, :]
-        s = jnp.where(col <= row, s, -jnp.inf)
+        s = jnp.where(col[None, :] <= row, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -34,6 +34,38 @@ scheduler: one coalesced copy flush (only when some sequence forks)
 lands before the fused step reads the arena.  ``fused=False`` keeps the
 pre-fusion eager path (a Python loop over layers, one launch per layer)
 as the benchmark baseline.
+
+A prefill batch is ONE compiled dispatch too (the fused bucketed
+prefill, symmetric with the decode round):
+
+* queued prompts are bucketed by length to powers of two (padding
+  positions carry attention-masked tokens) and stacked into one batch
+  per bucket, the batch itself bucketed to a power of two (padding rows
+  duplicate request 0);
+* the forward is a ``jax.lax.scan`` over the stacked layer params with
+  a length-masked flash-attention prefill
+  (``repro.kernels.flash_attention``, ``lengths`` masking), so the
+  traced program is O(1) in depth and a batch retraces only per
+  distinct (length-bucket, batch-bucket) pair —
+  ``stats["prefill_jit_traces"]`` counts retraces;
+* every prompt's new KV pages scatter straight into the donated arenas
+  *inside* the jit (``rc_ops.kv_scatter_inline`` against the cache's
+  host-side ``prefill_scatter_plan``), recorded through ``PimOpQueue``
+  accounting as the ``fused_prefill`` kind — no host-side
+  ``write_prompt_kv`` round-trip;
+* first-token selection runs in the same jit with one host transfer
+  per batch.
+
+When forking/active sequences coexist with queued prompts, the
+pre-round CoW copy flush is dispatched *before* the prefill host work
+(``PimOpQueue.flush_overlapped``), so the coalesced copies execute on
+device behind prefill batch assembly instead of stalling the decode
+round.  ``fused_prefill=False`` keeps the eager per-request path (one
+un-jitted dense ``T.forward`` per prompt + host-side KV writes) as the
+parity oracle and benchmark baseline.  The oracle contract is exact for
+greedy requests (``temperature == 0``); sampled requests draw one TRNG
+seed per fused *batch* vs one per eager *request*, so the two modes'
+random streams — and therefore sampled tokens — legitimately differ.
 """
 
 from __future__ import annotations
@@ -47,6 +79,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.kernels.drange import ops as dr_ops
+from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.paged_attention import ops as pa_ops
 from repro.kernels.rowclone import ops as rc_ops
 from repro.models import transformer as T
@@ -74,6 +107,7 @@ class PagedEngine:
                  num_pages: int = 256, pcfg: Optional[ParallelConfig] = None,
                  seed: int = 0, use_pallas: bool = False,
                  interpret: Optional[bool] = None, fused: bool = True,
+                 fused_prefill: bool = True,
                  lib=None, record_trace: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
@@ -91,13 +125,20 @@ class PagedEngine:
         self.interpret = ((jax.default_backend() != "tpu")
                           if interpret is None else interpret)
         self.fused = fused
+        self.fused_prefill = fused_prefill
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.rng_seed = jnp.asarray([seed, seed ^ 0x9E3779B9], jnp.uint32)
         self.rng_ctr = 0
         self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0,
-                      "jit_traces": 0, "fused_dispatches": 0}
+                      "jit_traces": 0, "fused_dispatches": 0,
+                      "prefill_jit_traces": 0, "fused_prefill_dispatches": 0}
         self._step = self._build_fused_step() if fused else None
+        self._prefill_step = (self._build_fused_prefill_step()
+                              if fused_prefill else None)
+        # decode tails already reserved this round (the pre-prefill
+        # overlap path reserves early; _decode_round must not re-reserve)
+        self._reserved_tails: set = set()
 
     # ----------------------------- API -------------------------------- #
 
@@ -108,18 +149,33 @@ class PagedEngine:
         results: Dict[int, List[int]] = {}
         rounds = 0
         while (self.queue or self.active) and rounds < max_rounds:
-            while self.queue:
-                self._prefill(self.queue.pop(0))
+            if self.queue:
+                if self.active:
+                    # overlap the pre-round CoW flush with prefill work:
+                    # reserve the decode tails NOW and dispatch the
+                    # coalesced copies, so forking workloads pay the
+                    # flush behind prefill host work (JAX dispatch is
+                    # async), not in front of the decode step
+                    self._reserve_tails(sorted(self.active))
+                    self.cache.queue.flush_overlapped(self.cache.lib.flush)
+                self._prefill_round()
+                # a budget of 1 is satisfied by the prefill token alone:
+                # retire those now instead of decoding a surplus token
+                self._finish_done(results)
             self._decode_round()
             rounds += 1
-            for rid in list(self.active):
-                r = self.active[rid]
-                if len(r.out_tokens) >= r.max_new_tokens:
-                    r.done = True
-                    results[rid] = r.out_tokens
-                    self.cache.free(rid)
-                    del self.active[rid]
+            self._finish_done(results)
         return results
+
+    def _finish_done(self, results: Dict[int, List[int]]) -> None:
+        for rid in list(self.active):
+            r = self.active[rid]
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
+                results[rid] = r.out_tokens
+                self.cache.free(rid)
+                del self.active[rid]
+                self._reserved_tails.discard(rid)
 
     # --------------------------- internals ----------------------------- #
 
@@ -147,7 +203,113 @@ class PagedEngine:
         donate = (2, 3) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate)
 
+    def _build_fused_prefill_step(self):
+        """One jit covering the whole prefill batch: masked forward +
+        in-jit KV scatter + first-token selection.  Retraces only per
+        distinct (length-bucket, batch-bucket) pair; the closure's
+        counter bump is exactly a retrace counter (the body only runs on
+        a trace-cache miss)."""
+        eng = self
+
+        def step(params, toks, lens, k_arena, v_arena, pages, slots, src,
+                 seed, temps, has_writes):
+            eng.stats["prefill_jit_traces"] += 1
+            return _fused_prefill_step(
+                eng.cfg, eng.pcfg, params, toks, lens, k_arena, v_arena,
+                pages, slots, src, seed, temps, has_writes=has_writes,
+                use_pallas=eng.use_pallas, interpret=eng.interpret)
+
+        donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(step, donate_argnums=donate,
+                       static_argnames=("has_writes",))
+
+    def _prefill_round(self) -> None:
+        """Drain the request queue: one fused jitted dispatch per
+        (length-bucket) prefill batch, or the eager per-request oracle
+        with ``fused_prefill=False`` (exact parity for greedy requests;
+        sampled requests consume the TRNG per batch vs per request, so
+        their streams differ by construction)."""
+        reqs, self.queue = self.queue, []
+        if not self.fused_prefill:
+            for r in reqs:
+                self._prefill(r)
+            return
+        # create every sequence in submission order first, so shared
+        # prefixes (`share_with`) resolve across bucket groups
+        for r in reqs:
+            self.cache.create(r.req_id, len(r.prompt),
+                              share_with=r.share_with,
+                              shared_len=r.shared_len)
+        groups: Dict[int, List[Request]] = {}
+        for r in reqs:
+            groups.setdefault(_bucket_pow2(len(r.prompt)), []).append(r)
+        for sp in sorted(groups):
+            self._prefill_batch_fused(groups[sp], sp)
+
+    def _prefill_batch_fused(self, reqs: List[Request], sp: int) -> None:
+        """One compiled dispatch for a same-length-bucket prefill batch;
+        one host transfer (the batch's first tokens)."""
+        B = len(reqs)
+        Bp = _bucket_pow2(B)
+        idx = list(range(B)) + [0] * (Bp - B)   # pad rows duplicate req 0
+        toks = np.zeros((Bp, sp), np.int32)
+        lens = np.zeros((Bp,), np.int32)
+        temps = np.zeros((Bp,), np.float32)
+        for row, i in enumerate(idx):
+            r = reqs[i]
+            toks[row, :len(r.prompt)] = r.prompt
+            lens[row] = len(r.prompt)
+            temps[row] = r.temperature
+        # host-side arena-destination plan: (page, slot) per prompt token
+        # the batch must write, plus the flat (row*sp + pos) source index
+        # into the forward's stacked K/V output
+        pages: List[int] = []
+        slots: List[int] = []
+        src: List[int] = []
+        for i, r in enumerate(reqs):
+            seq = self.cache.seqs[r.req_id]
+            start = seq.shared_prefix_pages * self.cache.page_size
+            p_i, s_i = self.cache.prefill_scatter_plan(seq, start=start)
+            pages += p_i
+            slots += s_i
+            src += [i * sp + pos for pos in range(start, seq.length)]
+        n_valid = len(pages)
+        N = Bp * sp
+        if n_valid:
+            # pad entries duplicate entry 0: identical (page, slot,
+            # value) writes are a deterministic no-op — the same trick
+            # the decode round plays with pad rows
+            pages += [pages[0]] * (N - n_valid)
+            slots += [slots[0]] * (N - n_valid)
+            src += [src[0]] * (N - n_valid)
+        else:
+            # batch fully covered by shared prefixes: nothing to write —
+            # has_writes=False skips the scatter inside the jit (its own
+            # trace, but the normal path never pays a no-op gather)
+            pages = [0] * N
+            slots = [0] * N
+            src = [0] * N
+        self.rng_ctr += 1
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        tokens, k_arena, v_arena = self._prefill_step(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            self.cache.k_arena, self.cache.v_arena,
+            jnp.asarray(pages, jnp.int32), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(src, jnp.int32), seed, jnp.asarray(temps),
+            has_writes=n_valid > 0)
+        self.cache.commit_fused_prefill(k_arena, v_arena, pages[:n_valid],
+                                        slots[:n_valid])
+        toks_np = np.asarray(tokens)[:B]    # the batch's one host transfer
+        for i, r in enumerate(reqs):
+            r.out_tokens.append(int(toks_np[i]))
+            self.active[r.req_id] = r
+            self.stats["prefills"] += 1
+        self.stats["fused_prefill_dispatches"] += 1
+
     def _prefill(self, req: Request) -> None:
+        """Eager per-request prefill — the fused path's parity oracle:
+        un-jitted dense ``T.forward`` (a fresh XLA trace per distinct
+        prompt length) plus host-side coalesced KV writes."""
         cfg, p = self.cfg, self.params
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
         seq = self.cache.create(req.req_id, len(req.prompt),
@@ -163,13 +325,22 @@ class PagedEngine:
         g = dense_cache["group0"]
         # g: {i_attn: (k,v)} stacked (L, 1, S, kvh, hd)
         for key, (k, v) in g.items():
-            kk = k[:, 0].transpose(0, 1, 2, 3)       # (L, S, kvh, hd)
-            self.cache.write_prompt_kv(seq, kk[:, start:max_len],
+            self.cache.write_prompt_kv(seq, k[:, 0][:, start:max_len],
                                        v[:, 0][:, start:max_len], start=start)
         tok = self._sample(logits[:, -1], req.temperature)
         req.out_tokens.append(int(tok[0]))
         self.active[req.req_id] = req
         self.stats["prefills"] += 1
+
+    def _reserve_tails(self, rids: List[int]) -> None:
+        """Reserve the incoming token's slot on every sequence in
+        ``rids`` exactly once per round (CoW-copies shared tails,
+        allocates boundary pages); idempotent within a round so the
+        pre-prefill overlap path and the decode round compose."""
+        for r in rids:
+            if r not in self._reserved_tails:
+                self.cache.ensure_writable_tail(self.cache.seqs[r])
+                self._reserved_tails.add(r)
 
     def _decode_round(self) -> None:
         if not self.active:
@@ -178,8 +349,8 @@ class PagedEngine:
         # reserve the slot for the incoming token on every sequence; the
         # CoW copies all land in ONE batched launch before attention reads
         # the arena (constant dispatch count, however many sequences fork)
-        for r in rids:
-            self.cache.ensure_writable_tail(self.cache.seqs[r])
+        self._reserve_tails(rids)
+        self._reserved_tails.clear()
         self.cache.flush_pending()
         if self.fused:
             toks = self._decode_round_fused(rids)
@@ -246,10 +417,9 @@ class PagedEngine:
         return np.asarray(toks)            # one host transfer
 
     def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
-        """Prefill-time sampling: delegates to the round sampler so the
-        inverse-CDF draw has exactly one implementation."""
-        if temperature == 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
+        """Eager-prefill sampling: delegates to ``_select_tokens`` — the
+        same helper the fused prefill/decode steps trace in-jit — so the
+        greedy/inverse-CDF choice has exactly one implementation."""
         self.rng_ctr += 1
         seed = self.rng_seed + jnp.uint32(self.rng_ctr)
         temps = jnp.full((logits.shape[0],), temperature, jnp.float32)
@@ -282,6 +452,93 @@ def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
     return tokens, k_arena, v_arena
 
 
+# ---------------------------------------------------------------------- #
+# Fused bucketed prefill step (traced once per (length, batch) bucket)
+# ---------------------------------------------------------------------- #
+
+
+def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
+                        pages, slots, src, seed, temps, *,
+                        has_writes: bool, use_pallas: bool,
+                        interpret: bool):
+    """Masked prefill forward + in-jit KV scatter + first-token
+    selection: a whole prefill batch as one compiled program over
+    donated arenas.
+
+    ``pages``/``slots``/``src`` are the host-side scatter plan (length
+    ``B*S`` flat entries): entry ``n`` writes the forward's stacked K/V
+    at flat source index ``src[n]`` to ``arena[:, pages[n], slots[n]]``
+    (pad entries duplicate entry 0 — identical writes, a deterministic
+    no-op).  ``has_writes=False`` (static: the all-shared-prefix batch)
+    skips the scatter entirely.
+    """
+    logits, k_all, v_all = _prefill_forward(cfg, pcfg, params, toks, lens,
+                                            use_pallas=use_pallas,
+                                            interpret=interpret)
+    L = k_all.shape[0]
+    Bp, Sp = toks.shape
+
+    def scatter(arena, new_all):
+        flat = new_all.reshape((L, Bp * Sp) + new_all.shape[3:])[:, src]
+        return rc_ops.kv_scatter_inline(arena, pages, slots,
+                                        flat.astype(arena.dtype),
+                                        use_pallas=use_pallas,
+                                        interpret=interpret)
+
+    if has_writes:
+        k_arena = scatter(k_arena, k_all)
+        v_arena = scatter(v_arena, v_all)
+    tokens = _select_tokens(logits, temps, seed, use_pallas=use_pallas,
+                            interpret=interpret)
+    return tokens, k_arena, v_arena
+
+
+def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
+                     use_pallas: bool = False, interpret: bool = True):
+    """Batched prefill forward over a length-padded prompt batch:
+    ``lax.scan`` over the stacked layer params (O(1) program size in
+    depth) with causal + per-sequence-length masked flash attention —
+    padded positions are never attended and their K/V never leave the
+    step (the scatter plan only sources real tokens).
+
+    toks: (B, S) int32 padded prompts; lens: (B,) valid lengths (>= 1).
+    Returns (last-real-token logits (B, V), k_all, v_all
+    (L, B, S, kvh, hd)).
+    """
+    hd = cfg.resolved_head_dim
+    B, S = toks.shape
+    x = embed(params["embed"], toks, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+    kinds = T.layer_groups(cfg)[0][1]
+
+    def attend(q, k, v):
+        # (B, S, h, hd) <-> the kernel's (B, h, S, hd) layout
+        o = fa_ops.attention_inline(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, sm_scale=hd ** -0.5,
+            lengths=lens, use_pallas=use_pallas, interpret=interpret)
+        return o.transpose(0, 2, 1, 3)
+
+    def body(x, p_layer):
+        k_toks = v_toks = None
+        for i, kind in enumerate(kinds):
+            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, attend)
+            if kv is not None:
+                k_toks, v_toks = kv
+        return x, (k_toks, v_toks)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["group0"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # each row's last REAL token (pad rows mirror row 0, lens >= 1)
+    x_last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
+    logits = logits_out(params["embed"], x_last, cfg,
+                        fp32=pcfg.logits_fp32)
+    return logits[:, 0], k_all, v_all
+
+
 def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
                    use_pallas: bool, interpret: bool) -> jax.Array:
     """Per-request token choice: greedy rows take the argmax, sampled
@@ -304,13 +561,13 @@ def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
                         operand=None)
 
 
-def _decode_layer(cfg, kind, sp, x, sin, cos, k_l, v_l, attend):
-    """One sublayer of the single-token decode forward — the one source
-    of truth shared by the fused scan body and the eager baseline loop.
-    ``attend(q, k_self, v_self)`` supplies the paged-attention call (the
-    two paths differ only in how that dispatch is issued).  Returns
-    (x, (k_tok, v_tok) | None)."""
-    hd = cfg.resolved_head_dim
+def _sublayer(cfg, kind, sp, x, sin, cos, attend):
+    """One decoder sublayer — the one source of truth shared by the
+    fused decode scan, the eager decode loop, AND the fused prefill
+    scan.  ``attend(q, k, v)`` supplies the attention dispatch over the
+    full (b, s, h, hd) projections (decode callers attend one token
+    against the arena, prefill callers run the length-masked flash
+    kernel).  Returns (x, (k, v) | None) with k/v (b, s, kvh, hd)."""
     h = rmsnorm(x, sp["norm"], cfg.norm_eps)
     if kind != "attn":
         return x + mlp(sp["mlp"], h, cfg.activation), None
@@ -319,11 +576,9 @@ def _decode_layer(cfg, kind, sp, x, sin, cos, k_l, v_l, attend):
     v = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wv"]))
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
-    # attention over arena pages with the fresh token (not yet written)
-    # merged in-kernel
-    o = attend(q[:, 0], k_l, v_l, k[:, 0], v[:, 0])
-    out = jnp.einsum("bshk,hkd->bsd", o[:, None], cast(sp["attn"]["wo"]))
-    return x + out, (k[:, 0], v[:, 0])
+    o = attend(q, k, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(sp["attn"]["wo"]))
+    return x + out, (k, v)
 
 
 def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
@@ -341,20 +596,24 @@ def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
 
-    def attend(q, k_l, v_l, k_self, v_self):
-        return pa_ops.paged_attention_inline(
-            q, k_l, v_l, block_tables, lengths, sm_scale=hd ** -0.5,
-            use_pallas=use_pallas, interpret=interpret,
-            k_self=k_self, v_self=v_self)
-
     def body(x, xs):
         p_layer, k_l, v_l = xs
+
+        def attend(q, k, v):
+            # one token against the arena pages, with the fresh K/V
+            # (not yet written) merged in-kernel
+            o = pa_ops.paged_attention_inline(
+                q[:, 0], k_l, v_l, block_tables, lengths,
+                sm_scale=hd ** -0.5, use_pallas=use_pallas,
+                interpret=interpret, k_self=k[:, 0], v_self=v[:, 0])
+            return o[:, None]
+
         k_tok = v_tok = None
         for i, kind in enumerate(kinds):
-            x, kv = _decode_layer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, k_l, v_l, attend)
+            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, attend)
             if kv is not None:
-                k_tok, v_tok = kv
+                k_tok, v_tok = kv[0][:, 0], kv[1][:, 0]
         return x, (k_tok, v_tok)
 
     x, (k_news, v_news) = jax.lax.scan(
@@ -368,7 +627,7 @@ def _eager_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                           v_arena, block_tables, lengths, *,
                           use_pallas: bool = False, interpret: bool = True):
     """Pre-fusion baseline: Python loop over layers, one jitted
-    paged-attention dispatch per layer.  Shares ``_decode_layer`` with
+    paged-attention dispatch per layer.  Shares ``_sublayer`` with
     the fused path (the self-token merge still happens in-kernel — the
     old full-history re-reading merge pass is gone)."""
     hd = cfg.resolved_head_dim
@@ -378,21 +637,25 @@ def _eager_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
     gparams = params["group0"]
     L, kinds = T.layer_groups(cfg)[0]
 
-    def attend(q, k_l, v_l, k_self, v_self):
-        return pa_ops.paged_attention(
-            q, k_l, v_l, block_tables, lengths, sm_scale=hd ** -0.5,
-            use_pallas=use_pallas, interpret=interpret,
-            k_self=k_self, v_self=v_self)
+    def layer_attend(k_l, v_l):
+        def attend(q, k, v):
+            o = pa_ops.paged_attention(
+                q[:, 0], k_l, v_l, block_tables, lengths,
+                sm_scale=hd ** -0.5, use_pallas=use_pallas,
+                interpret=interpret, k_self=k[:, 0], v_self=v[:, 0])
+            return o[:, None]
+        return attend
 
     k_news, v_news = [], []
     for li in range(L):
         p_layer = jax.tree.map(lambda a: a[li], gparams)
+        attend = layer_attend(k_arena[li], v_arena[li])
         for i, kind in enumerate(kinds):
-            x, kv = _decode_layer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, k_arena[li], v_arena[li], attend)
+            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, attend)
             if kv is not None:
-                k_news.append(kv[0][None])   # (1, b, kvh, hd)
-                v_news.append(kv[1][None])
+                k_news.append(kv[0][:, 0][None])   # (1, b, kvh, hd)
+                v_news.append(kv[1][:, 0][None])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_out(params["embed"], x, cfg)
     k_new = jnp.concatenate(k_news, axis=0)[:, :, None]   # (L, b, 1, kvh, hd)

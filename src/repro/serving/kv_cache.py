@@ -38,11 +38,14 @@ With ``record_trace=True`` the cache keeps a
 vs memcpy/calloc latency accounting of the actual serving workload
 (:func:`repro.serving.trace.replay_on_device`).
 
-The engine's fused decode round is the one exception to queue routing:
-its KV scatter runs *inside* the jitted step on donated arenas, and the
-cache adopts the results via :meth:`PagedKVCache.commit_fused_round`
-(which still records the dispatch in the queue's launch counters, and
-the writes in the trace).
+The engine's fused decode round and fused prefill batch are the two
+exceptions to queue routing: their KV scatters run *inside* the jitted
+step on donated arenas (the prefill scatter against the host-side
+:meth:`PagedKVCache.prefill_scatter_plan`), and the cache adopts the
+results via :meth:`PagedKVCache.commit_fused_round` /
+:meth:`PagedKVCache.commit_fused_prefill` (which still record the
+dispatches in the queue's launch counters — ``fused_decode`` /
+``fused_prefill`` kinds — and the writes in the trace).
 """
 
 from __future__ import annotations
@@ -266,13 +269,27 @@ class PagedKVCache:
     def write_prompt_kv(self, seq: Sequence, k: jax.Array, v: jax.Array,
                         start: int = 0) -> None:
         """k, v: (layers, n, kvh, hd) — bulk write prefilled KV in one
-        coalesced scatter launch per arena (was: n separate updates)."""
+        coalesced scatter launch per arena (was: n separate updates).
+        This is the eager-prefill path; the fused prefill step scatters
+        in-jit against :meth:`prefill_scatter_plan` instead."""
         n = k.shape[1]
         pages = [seq.pages[(start + i) // self.page_size] for i in range(n)]
         slots = [(start + i) % self.page_size for i in range(n)]
         self.queue.admit("kv_write", pages, self.lib.flush)
         self.queue.enqueue_kv_writes(pages, slots, k, v)
         self.flush_pending()
+
+    def prefill_scatter_plan(self, seq: Sequence,
+                             start: int = 0) -> Tuple[List[int], List[int]]:
+        """Host-side arena-destination plan for a prefilled prompt: the
+        (page, slot) pair per position in ``[start, seq.length)``.  The
+        engine's fused prefill step scatters the forward's fresh KV
+        against this plan *inside* the jit (no ``write_prompt_kv``
+        host round-trip); ``start`` skips a shared prefix."""
+        pages = [seq.pages[s // self.page_size]
+                 for s in range(start, seq.length)]
+        slots = [s % self.page_size for s in range(start, seq.length)]
+        return pages, slots
 
     def free(self, seq_id: int) -> None:
         """Release a sequence; all its dead pages zero in one batched
@@ -306,6 +323,29 @@ class PagedKVCache:
         for sid in seq_ids:
             self.seqs[sid].length += 1
         self.queue.count_external("fused_decode")
+
+    def commit_fused_prefill(self, k_arena: jax.Array, v_arena: jax.Array,
+                             pages: List[int], slots: List[int]) -> None:
+        """Adopt arenas mutated inside the engine's fused prefill step
+        (the batch's prompt-KV scatter runs in-jit on donated buffers,
+        so there is no separate ``kv_write`` flush).  ``pages``/``slots``
+        name the positions actually written (the batch's scatter plan,
+        shared-prefix positions excluded); sequence lengths were already
+        set at ``create`` time, so unlike ``commit_fused_round`` nothing
+        advances here.  The single fused dispatch is recorded in the
+        queue's launch counters under the ``fused_prefill`` kind —
+        prefill KV writes show up in ``launches_by_kind`` exactly like
+        decode writes — and, when tracing, the writes land in the
+        trace."""
+        self.k_arena = k_arena
+        self.v_arena = v_arena
+        if self.trace is not None and pages:
+            tok_bytes = (2 * self.n_layers * self.cfg.num_kv_heads
+                         * self.cfg.resolved_head_dim
+                         * np.dtype(self.dtype).itemsize)
+            self.trace.record_kv_write(pages, slots,
+                                       len(pages) * tok_bytes)
+        self.queue.count_external("fused_prefill")
 
     def block_table(self, seq_ids: List[int],
                     max_pages: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:

@@ -130,19 +130,16 @@ class TestTpuPimolib:
         assert lib.stats["writes"] == 2 and lib.stats["reads"] == 4
         assert lib.queue.stats["ops_enqueued"] == lib.queue.stats["ops_coalesced"] == 4
 
-    def test_v1_aliases_still_work(self):
-        from repro.core import make_tpu_arena, TpuLib, Blocking
+    def test_v1_page_aliases_retired(self):
+        # the *_pages deprecation cycle (PR 3) is over: the aliases are
+        # gone, so stale v1 call sites fail loudly instead of warning
+        from repro.core import make_tpu_arena, TpuLib
         arena = make_tpu_arena(num_slabs=1, pages_per_slab=4, page_elems=8,
                                dtype=jnp.float32)
         lib = TpuLib(arena)
-        src, dst = arena.allocator.alloc_copy_pair(1)
-        with pytest.deprecated_call():
-            lib.write_pages(src, jnp.full((1, 8), 3.0))
-        with pytest.deprecated_call():
-            lib.copy_pages(src, dst, blocking=Blocking.FIN)
-        with pytest.deprecated_call():
-            np.testing.assert_array_equal(np.asarray(lib.read_pages(dst)),
-                                          np.full((1, 8), 3.0, np.float32))
+        for alias in ("copy_pages", "init_pages", "read_pages",
+                      "write_pages"):
+            assert not hasattr(lib, alias), alias
 
     def test_same_slab_constraint_enforced(self):
         from repro.core import make_tpu_arena, TpuLib

@@ -219,6 +219,29 @@ class TestFlashAttention:
                                    np.asarray(expect, np.float32),
                                    rtol=5e-2, atol=5e-2)
 
+    def test_lengths_mask_matches_ref(self):
+        # per-sequence valid-length masking (the fused bucketed-prefill
+        # contract): kernel vs jnp oracle, and the masked rows must
+        # equal an unpadded run of the same prompts
+        rng = np.random.default_rng(3)
+        b, h, kvh, s, d = 3, 4, 2, 40, 16
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, kvh, s, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, kvh, s, d)).astype(np.float32))
+        lens = jnp.asarray([40, 23, 9], jnp.int32)
+        out = fa.flash_attention(q, k, v, causal=True, block_q=16,
+                                 block_k=16, lengths=lens, interpret=True)
+        expect = fa_ref.attention(q, k, v, causal=True, lengths=lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=3e-5, atol=3e-5)
+        # row 2's valid prefix matches the unpadded single-sequence run
+        n = 9
+        solo = fa_ref.attention(q[2:3, :, :n], k[2:3, :, :n], v[2:3, :, :n],
+                                causal=True)
+        np.testing.assert_allclose(np.asarray(out[2, :, :n]),
+                                   np.asarray(solo[0]),
+                                   rtol=3e-5, atol=3e-5)
+
 
 class TestPagedAttention:
     @settings(**SETTINGS)

@@ -51,6 +51,14 @@ def _drive(lib: PimLib, payload: np.ndarray):
     return dst_vals, src_vals, receipts
 
 
+def test_serving_pim_queue_shim_removed():
+    """The PR 3 relocation's deprecation cycle is over: the
+    ``repro.serving.pim_queue`` re-export shim is gone for good — this
+    pin keeps it from silently coming back."""
+    with pytest.raises(ModuleNotFoundError):
+        import repro.serving.pim_queue  # noqa: F401
+
+
 class TestCrossFaceParity:
     def test_same_trace_same_contents(self):
         payload = np.random.default_rng(3).integers(
@@ -226,6 +234,23 @@ class TestHazardAwareQueue:
         assert float(np.asarray(lib.read(c))[0, 0]) == 5.0
         assert lib.queue.stats["hazard_flushes"] == 1
         assert lib.queue.launches_by_kind["page_copy"] == 2
+
+    def test_flush_overlapped_dispatches_backlog_early(self):
+        # the engine's pre-prefill overlap hook: a pending backlog is
+        # dispatched immediately (device work runs behind upcoming host
+        # work); an empty queue is a cheap no-op
+        lib = self._lib()
+        src, dst = lib.allocator.alloc_copy_pair(2)
+        lib.write(src, jnp.full((2, 8), 4.0))
+        lib.copy(src, dst)
+        assert lib.queue.pending_ops > 0
+        assert lib.queue.flush_overlapped(lib.flush)
+        assert lib.queue.pending_ops == 0
+        assert lib.queue.stats["overlap_flushes"] == 1
+        assert not lib.queue.flush_overlapped(lib.flush)   # nothing pending
+        assert lib.queue.stats["overlap_flushes"] == 1
+        np.testing.assert_array_equal(np.asarray(lib.read(dst)),
+                                      np.full((2, 8), 4.0, np.float32))
 
     def test_default_seed_rand_advances_per_call(self):
         lib = self._lib()

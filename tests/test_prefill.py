@@ -1,0 +1,219 @@
+"""Fused bucketed prefill: one jitted dispatch per prefill batch.
+
+The parity harness: ``fused_prefill=False`` keeps the eager
+per-request prefill (un-jitted dense ``T.forward`` + host-side
+``write_prompt_kv``) as the oracle, so the fused path is pinned by
+fused-vs-eager **token**, **logit**, and **arena-content** parity —
+across prompt lengths that straddle power-of-two bucket boundaries,
+shared-prefix (``share_with``) requests, and mixed-length batches —
+plus retrace regressions on ``stats["prefill_jit_traces"]``.
+(The dispatch-count regressions live with the other launch-count pins
+in ``tests/test_serving.py::TestDispatchCounts``.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ParallelConfig, reduced
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import PagedEngine, Request
+from repro.serving.kv_cache import _bucket_pow2
+
+PCFG = ParallelConfig(attention_impl="naive", remat="none")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine_pair(cfg, params, **kw):
+    fused = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                        fused_prefill=True, **kw)
+    eager = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                        fused_prefill=False, **kw)
+    return fused, eager
+
+
+def _submit_all(engines, reqs):
+    """Submit fresh Request copies to every engine (Requests mutate)."""
+    for eng in engines:
+        for r in reqs:
+            eng.submit(Request(r.req_id, r.prompt,
+                               max_new_tokens=r.max_new_tokens,
+                               temperature=r.temperature,
+                               share_with=r.share_with,
+                               shared_len=r.shared_len))
+
+
+def _arenas_equal(a, b):
+    # both paths compute K/V in bf16; scan-vs-dense fusion may round
+    # intermediates differently, so parity holds at bf16 resolution
+    np.testing.assert_allclose(
+        np.asarray(a.cache.k_arena, np.float32),
+        np.asarray(b.cache.k_arena, np.float32), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(
+        np.asarray(a.cache.v_arena, np.float32),
+        np.asarray(b.cache.v_arena, np.float32), rtol=2e-2, atol=2e-2)
+
+
+class TestPrefillParity:
+    def test_bucket_boundary_lengths(self, model, rng):
+        """7/8/9 and 15/16/17 straddle the 8- and 16-buckets: each
+        prompt prefills as its own batch (separate rounds) and must
+        match the eager oracle token-for-token, with identical arena
+        contents after the prefill writes."""
+        cfg, params = model
+        fused, eager = _engine_pair(cfg, params)
+        for i, n in enumerate((7, 8, 9, 15, 16, 17)):
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            req = Request(i, prompt, max_new_tokens=2, temperature=0.0)
+            _submit_all((fused, eager), [req])
+            fused._prefill_round()
+            eager._prefill_round()
+            _arenas_equal(fused, eager)   # prompt KV written identically
+            f = fused.active[i].out_tokens
+            e = eager.active[i].out_tokens
+            assert f == e, (n, f, e)
+        # and the decode rounds that follow agree too
+        assert fused.run() == eager.run()
+
+    def test_mixed_length_batch_parity(self, model, rng):
+        """One submission spanning three buckets: the fused path stacks
+        per-bucket batches (2, 3, and 1 requests) and must match the
+        eager oracle exactly."""
+        cfg, params = model
+        fused, eager = _engine_pair(cfg, params)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                        max_new_tokens=3, temperature=0.0)
+                for i, n in enumerate((7, 8, 9, 15, 16, 17))]
+        _submit_all((fused, eager), reqs)
+        res_f, res_e = fused.run(), eager.run()
+        assert res_f == res_e
+        assert fused.stats["prefills"] == 6
+        # 3 distinct (length-bucket, batch-bucket) pairs -> 3 traces
+        assert fused.stats["prefill_jit_traces"] == 3
+
+    def test_shared_prefix_parity(self, model, rng):
+        """`share_with` requests skip the shared pages in the scatter
+        plan; fused and eager must agree on tokens, arena contents, and
+        prefix accounting — including a sharer whose prompt is FULLY
+        covered by the prefix (the all-no-op scatter batch)."""
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        fused, eager = _engine_pair(cfg, params)
+        reqs = [Request(0, prompt, max_new_tokens=3, temperature=0.0),
+                Request(1, prompt, max_new_tokens=3, temperature=0.0,
+                        share_with=0, shared_len=12)]
+        _submit_all((fused, eager), reqs)
+        fused._prefill_round()
+        eager._prefill_round()
+        _arenas_equal(fused, eager)
+        # a fully-covered sharer arrives next round: nothing to write,
+        # and the no-op scatter must leave the arena untouched
+        before = np.asarray(fused.cache.k_arena, np.float32).copy()
+        _submit_all((fused, eager),
+                    [Request(2, prompt, max_new_tokens=3, temperature=0.0,
+                             share_with=0, shared_len=16)])
+        fused._prefill_round()
+        eager._prefill_round()
+        np.testing.assert_array_equal(
+            before, np.asarray(fused.cache.k_arena, np.float32))
+        _arenas_equal(fused, eager)
+        res_f, res_e = fused.run(), eager.run()
+        assert res_f == res_e
+        assert res_f[0] == res_f[1] == res_f[2]
+        assert fused.cache.stats["prefix_hits"] == 2
+        assert (fused.cache.stats["prefix_hits"]
+                == eager.cache.stats["prefix_hits"])
+
+    def test_prefill_forward_matches_eager_logits(self, model, rng):
+        """Logit-level parity of the scan/masked forward against the
+        dense ``T.forward`` oracle, at bf16 resolution, for a padded
+        (bucketed) and an exact-fit prompt — plus the stacked K/V the
+        scatter plan sources."""
+        from repro.serving import engine as E
+        cfg, params = model
+        for n in (5, 8):
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            sp = _bucket_pow2(n)
+            toks = np.zeros((1, sp), np.int32)
+            toks[0, :n] = prompt
+            lg_f, k_all, v_all = E._prefill_forward(
+                cfg, PCFG, params, jnp.asarray(toks),
+                jnp.asarray([n], jnp.int32), use_pallas=False,
+                interpret=True)
+            cache = T.init_cache(cfg, 1, n)
+            lg_e, dense, _ = T.forward(
+                cfg, PCFG, params, {"tokens": jnp.asarray(prompt)[None]},
+                mode="prefill", cache=cache,
+                lengths=jnp.asarray([n], jnp.int32))
+            np.testing.assert_allclose(np.asarray(lg_f[0]),
+                                       np.asarray(lg_e[0, 0]),
+                                       rtol=2e-2, atol=2e-2)
+            k_e, v_e = dense["group0"]["0_attn"]   # (L, 1, n, kvh, hd)
+            np.testing.assert_allclose(
+                np.asarray(k_all[:, 0, :n], np.float32),
+                np.asarray(k_e[:, 0], np.float32), rtol=2e-2, atol=2e-2)
+            np.testing.assert_allclose(
+                np.asarray(v_all[:, 0, :n], np.float32),
+                np.asarray(v_e[:, 0], np.float32), rtol=2e-2, atol=2e-2)
+
+    def test_pallas_path_matches_reference(self, model, rng):
+        """The length-masked Pallas flash kernel drives the same fused
+        prefill to the same tokens as the jnp reference path."""
+        cfg, params = model
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (5, 7)]
+        outs = []
+        for use_pallas in (False, True):
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                              use_pallas=use_pallas, interpret=True)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(i, p, max_new_tokens=2, temperature=0.0))
+            outs.append(eng.run())
+        assert outs[0] == outs[1]
+
+
+class TestPrefillRetrace:
+    def test_traces_bounded_by_distinct_buckets(self, model, rng):
+        """N prompts of varied lengths compile at most one trace per
+        distinct (length-bucket, batch-bucket) pair — and resubmitting
+        the same pattern compiles nothing new."""
+        cfg, params = model
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=128)
+
+        def burst(base):
+            # lengths 5..8 share the 8-bucket (batch of 4); 9 and 12
+            # share the 16-bucket (batch of 2, padded to 2)
+            for j, n in enumerate((5, 6, 7, 8, 9, 12)):
+                prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                eng.submit(Request(base + j, prompt, max_new_tokens=1,
+                                   temperature=0.0))
+            eng._prefill_round()
+
+        burst(0)
+        assert eng.stats["prefill_jit_traces"] == 2
+        burst(10)      # identical bucket pattern -> trace cache hits only
+        assert eng.stats["prefill_jit_traces"] == 2
+        assert eng.stats["fused_prefill_dispatches"] == 4
+        eng.run()      # drain so the arena frees cleanly
+
+    def test_single_request_growth_retraces_at_boundaries(self, model, rng):
+        """Submitting lengths 7, 8 (same bucket) then 9 (next bucket)
+        one at a time: only the bucket crossing retraces."""
+        cfg, params = model
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=128)
+        traces = []
+        for i, n in enumerate((7, 8, 9)):
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new_tokens=1, temperature=0.0))
+            eng._prefill_round()
+            traces.append(eng.stats["prefill_jit_traces"])
+        assert traces == [1, 1, 2], traces
+        eng.run()

@@ -204,6 +204,31 @@ class TestDispatchCounts:
         assert q["ops_enqueued"] == 7                 # 7 page inits...
         assert cache.queue.launches_by_kind["page_init"] == 2  # ...2 launches
 
+    @staticmethod
+    def _fused_prefill_launches(layers, nreqs, prompt_len, rng):
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=layers)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        for i in range(nreqs):
+            prompt = rng.integers(0, cfg.vocab_size, prompt_len)
+            eng.submit(Request(i, prompt.astype(np.int32), max_new_tokens=1,
+                               temperature=0.0))
+        base = eng.cache.queue.stats["launches"]
+        eng._prefill_round()
+        assert eng.cache.queue.launches_by_kind["fused_prefill"] == 1
+        return eng.cache.queue.stats["launches"] - base
+
+    def test_fused_prefill_launches_independent_of_layers_and_batch(self, rng):
+        """A same-bucket prefill batch is ONE dispatch (forward + KV
+        scatter + sampling in a single jit, accounted as the
+        ``fused_prefill`` kind) no matter how many layers the model has,
+        how many requests stack into the batch, or how long the prompts
+        are."""
+        counts = [self._fused_prefill_launches(layers, nreqs, plen, rng)
+                  for layers, nreqs, plen in
+                  ((1, 1, 7), (2, 3, 7), (4, 2, 14))]
+        assert set(counts) == {1}, counts
+
 
 class TestFusedDecode:
     """The fused single-dispatch decode round: jitted scan-over-layers
