@@ -10,6 +10,11 @@
 6. Record a serving-style trace on the JAX face and replay it on the
    model face for paper-style RowClone-vs-CPU latency totals.
 
+Want to add your own PiM op to this protocol?  The worked, doctested
+"~60 lines" recipe (register an Ambit-style op on either face in one
+`register_pim_op` call) lives in the `repro/core/op_registry.py`
+module docstring; `docs/ARCHITECTURE.md` maps where the op travels.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 

@@ -21,6 +21,60 @@ paper's "60 additional lines of Verilog" extensibility argument.  Faces
 a spec does not implement are visible through :func:`supports`, so
 callers degrade gracefully (``KV_WRITE`` has no DDR3 command sequence;
 the model face accounts it as a CPU write instead).
+
+Worked example — registering "Ambit-AND" (an in-DRAM bitwise AND)
+---------------------------------------------------------------------
+
+The whole recipe, runnable (CI executes it via ``pytest
+--doctest-modules``).  Pick an unused opcode value (add a real member to
+:class:`repro.core.isa.Opcode` when upstreaming; a plain int serves the
+demo), write a JAX-face flush executor, and register:
+
+>>> from repro.core.op_registry import (PimOpSpec, register_pim_op,
+...                                     get_op, supports)
+>>> AMB_AND = 0x40                        # unused opcode value
+>>> def _flush_and(q, arenas, ops):
+...     # ONE coalesced launch for the whole pending batch (a real op
+...     # dispatches its Pallas kernel over `arenas` here and returns
+...     # the updated buffers)
+...     q._count_launch("page_and", 1)
+...     return arenas
+>>> _ = register_pim_op(PimOpSpec(
+...     opcode=AMB_AND, name="ambit_and",
+...     jax_kind="page_and", jax_flush=_flush_and))
+
+Capability flags answer per face — no ``device_seq`` was given, so the
+model face reports the op unsupported and callers fall back gracefully:
+
+>>> supports(AMB_AND, "jax"), supports(AMB_AND, "device")
+(True, False)
+>>> get_op(AMB_AND).name
+'ambit_and'
+
+Every :class:`repro.core.pim_queue.PimOpQueue` built after registration
+knows the new kind and coalesces it exactly like the built-ins:
+
+>>> from repro.core.pim_queue import PimOpQueue
+>>> q = PimOpQueue()
+>>> q.enqueue("page_and", (3, 5)); q.enqueue("page_and", (4, 6))
+>>> _ = q.flush()                         # both ops, one launch
+>>> q.launches_by_kind["page_and"], q.stats["ops_enqueued"]
+(1, 2)
+
+A real op stays registered, of course — the demo tidies up so this
+example is re-runnable and later-built queues don't carry it:
+
+>>> from repro.core import op_registry as _reg
+>>> del _reg._REGISTRY[AMB_AND]
+
+To light up the model face too, add two fields to the spec:
+``device_seq`` naming the :class:`repro.core.memctrl.MemoryController`
+command sequence the POC runs when it decodes the opcode, and
+``device_insns`` building the :class:`Instruction` batch a
+:class:`repro.core.pimolib.DeviceLib` call stages (see the built-in
+``RC_COPY`` spec at the bottom of this module for the shape).
+``examples/quickstart.py`` tours the resulting protocol end to end on
+both faces.
 """
 
 from __future__ import annotations
@@ -41,7 +95,9 @@ FACE_JAX = "jax"
 
 @dataclass(frozen=True)
 class PimOpSpec:
-    """One PiM op: opcode + per-face executors (None = face unsupported)."""
+    """One PiM op: opcode + per-face executors (None = face
+    unsupported).  The fields below are everything a new technique
+    needs; the module docstring walks a registration end to end."""
 
     opcode: Opcode
     name: str                                  # OpReceipt.op on every face
@@ -66,6 +122,12 @@ _REGISTRY: Dict[Opcode, PimOpSpec] = {}
 
 
 def register_pim_op(spec: PimOpSpec, *, override: bool = False) -> PimOpSpec:
+    """Register ``spec`` as THE implementation of its opcode — the one
+    extension point for new PiM techniques (see the worked Ambit-AND
+    example in the module docstring).  Queues built afterwards pick up
+    the spec's JAX kind automatically; ``override=True`` replaces an
+    existing registration (tests), otherwise a duplicate opcode is an
+    error.  Returns the spec for assignment convenience."""
     if spec.opcode in _REGISTRY and not override:
         raise ValueError(f"opcode {spec.opcode!r} already registered "
                          f"as {_REGISTRY[spec.opcode].name!r}")

@@ -89,6 +89,13 @@ class PimLib(abc.ABC):
     ``flush`` drains any deferred backlog; ``rand`` draws true-random
     bits from the face's D-RaNGe implementation.  ``Blocking.FIN`` is a
     full synchronization point on every face.
+
+    Op behaviour is NOT defined here: every call resolves through the
+    opcode-keyed registry (:mod:`repro.core.op_registry` — see its
+    module docstring for the worked one-call extension recipe), so a
+    newly registered op is immediately callable on every face that got
+    an executor.  ``docs/ARCHITECTURE.md`` maps which path each call
+    takes per face and where its accounting lands.
     """
 
     face: str = "?"

@@ -19,6 +19,18 @@ to their real tokens.  ``lengths`` rides in as a scalar-prefetch operand
 (the same mechanism the paged-attention kernel uses for block tables),
 so the mask costs one SMEM read per tile, not a VMEM operand.
 
+Prefix-KV masking (the chunked-prefill contract): with ``k_prefix`` /
+``v_prefix`` (B, KVH, Sp, D) and ``prefix_lengths`` (B,), the chunk's
+queries additionally attend over a sequence's *already-committed* KV —
+the caller's gather of the paged arena — prepended to the chunk's own
+keys.  Prefix columns are NOT causally masked (every real prefix
+position precedes every chunk query position by construction); they are
+masked only by ``prefix_lengths[b]``.  Chunk columns keep the causal +
+``lengths`` mask, shifted by the static prefix capacity.  Both length
+vectors ride as scalar-prefetch operands; a row with
+``prefix_lengths[b] == 0`` degenerates exactly to the prefix-less
+kernel.
+
 Block sizes default to (bq, bk) = (256, 512) with head_dim up to 256:
 q-tile 256x256xf32 (256 KB) + k,v tiles 512x256 (2x512 KB) + acc scratch
 well under the ~16 MiB VMEM budget, MXU-aligned (multiples of 128).
@@ -37,8 +49,11 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(*refs, sm_scale: float, causal: bool, bq: int, bk: int,
-                  seq_k: int, has_lengths: bool):
-    if has_lengths:
+                  seq_k: int, has_lengths: bool, seq_prefix: int = 0,
+                  has_prefix: bool = False):
+    if has_prefix:
+        len_ref, plen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    elif has_lengths:
         len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     else:
         q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
@@ -63,11 +78,23 @@ def _flash_kernel(*refs, sm_scale: float, causal: bool, bq: int, bk: int,
 
     col = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     mask = col < seq_k                                   # padding mask
-    if has_lengths:
-        mask = mask & (col < len_ref[b])                 # per-sequence length
-    if causal:
+    if has_prefix:
+        # keys are [prefix ; chunk]: prefix columns mask only by the
+        # per-sequence committed length (every real prefix position
+        # precedes every chunk query); chunk columns keep the causal +
+        # chunk-length mask, shifted by the static prefix capacity
         row = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        mask = mask & (col <= row)
+        cc = col - seq_prefix                            # chunk-local column
+        chunk_ok = cc < len_ref[b]
+        if causal:
+            chunk_ok = chunk_ok & (cc <= row)
+        mask = mask & jnp.where(col < seq_prefix, col < plen_ref[b], chunk_ok)
+    else:
+        if has_lengths:
+            mask = mask & (col < len_ref[b])             # per-sequence length
+        if causal:
+            row = i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = mask & (col <= row)
     s = jnp.where(mask, s, _NEG_INF)
 
     m_prev = m_scr[...]                                  # (bq, 1)
@@ -92,6 +119,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, sm_scale: float | None = None,
                     block_q: int = 256, block_k: int = 512,
                     lengths: jax.Array | None = None,
+                    k_prefix: jax.Array | None = None,
+                    v_prefix: jax.Array | None = None,
+                    prefix_lengths: jax.Array | None = None,
                     interpret: bool = False) -> jax.Array:
     """Fused attention forward.
 
@@ -99,8 +129,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``lengths``: optional (B,) int32 valid kv lengths — columns at or
     beyond ``lengths[b]`` are masked (length-padded prefill batches; for
     well-defined rows every length must be >= 1 under ``causal``).
-    Returns (B, H, Sq, D) in q.dtype.
+    ``k_prefix``/``v_prefix``: optional (B, KVH, Sp, D) already-committed
+    KV the queries may attend over in full (no causal mask — the chunked
+    prefill contract: every query sits at a position after the whole
+    prefix), masked per row by ``prefix_lengths`` (B,) int32; rows with
+    ``prefix_lengths[b] == 0`` see no prefix at all.  Requires
+    ``lengths``.  Returns (B, H, Sq, D) in q.dtype.
     """
+    has_prefix = k_prefix is not None
+    sp = 0
+    if has_prefix:
+        assert v_prefix is not None and prefix_lengths is not None
+        assert lengths is not None, "prefix-KV path requires lengths"
+        sp = k_prefix.shape[2]
+        k = jnp.concatenate([k_prefix, k], axis=2)
+        v = jnp.concatenate([v_prefix, v], axis=2)
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
     assert h % kvh == 0, (h, kvh)
@@ -122,7 +165,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bk=bk,
-        seq_k=sk, has_lengths=lengths is not None)
+        seq_k=sk, has_lengths=lengths is not None, seq_prefix=sp,
+        has_prefix=has_prefix)
 
     out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
     scratch_shapes = [
@@ -151,10 +195,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             interpret=interpret,
         )(q, k, v)
     else:
-        # lengths ride as a scalar-prefetch operand (SMEM), the same
-        # mechanism the paged-attention kernel uses for block tables
+        # lengths (and, on the chunked path, prefix_lengths) ride as
+        # scalar-prefetch operands (SMEM), the same mechanism the
+        # paged-attention kernel uses for block tables
+        scalars = [lengths.astype(jnp.int32)]
+        if has_prefix:
+            scalars.append(prefix_lengths.astype(jnp.int32))
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(scalars),
             grid=grid,
             in_specs=in_specs,
             out_specs=out_specs,
@@ -165,5 +213,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             grid_spec=grid_spec,
             out_shape=out_shape,
             interpret=interpret,
-        )(lengths.astype(jnp.int32), q, k, v)
+        )(*scalars, q, k, v)
     return out[:, :, :sq]

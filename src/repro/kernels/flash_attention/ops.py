@@ -21,19 +21,29 @@ def attention_inline(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      causal: bool = True, sm_scale: float | None = None,
                      block_q: int = 256, block_k: int = 512,
                      lengths: jax.Array | None = None,
+                     k_prefix: jax.Array | None = None,
+                     v_prefix: jax.Array | None = None,
+                     prefix_lengths: jax.Array | None = None,
                      use_pallas: bool = True,
                      interpret: bool = not _ON_TPU) -> jax.Array:
     """Pallas-or-reference dispatch; see the kernel for the contract.
 
     ``lengths`` (B,) masks key columns at or beyond each sequence's
-    valid length (length-padded prefill batches).
+    valid length (length-padded prefill batches).  ``k_prefix`` /
+    ``v_prefix`` (B, KVH, Sp, D) + ``prefix_lengths`` (B,) add the
+    chunked-prefill prefix-KV path: queries attend the committed prefix
+    in full (no causal mask) and the chunk keys causally.
     """
     if use_pallas:
         return fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
                                   block_q=block_q, block_k=block_k,
-                                  lengths=lengths, interpret=interpret)
+                                  lengths=lengths, k_prefix=k_prefix,
+                                  v_prefix=v_prefix,
+                                  prefix_lengths=prefix_lengths,
+                                  interpret=interpret)
     return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale,
-                         lengths=lengths)
+                         lengths=lengths, k_prefix=k_prefix,
+                         v_prefix=v_prefix, prefix_lengths=prefix_lengths)
 
 
 attention = functools.partial(

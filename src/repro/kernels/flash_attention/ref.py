@@ -10,7 +10,24 @@ _NEG_INF = -1e30
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, sm_scale: float | None = None,
-              lengths: jax.Array | None = None) -> jax.Array:
+              lengths: jax.Array | None = None,
+              k_prefix: jax.Array | None = None,
+              v_prefix: jax.Array | None = None,
+              prefix_lengths: jax.Array | None = None) -> jax.Array:
+    """See :func:`..flash_attention.flash_attention` for the contract.
+
+    With ``k_prefix``/``v_prefix`` (B, KVH, Sp, D) the queries attend
+    over the prefix in full (masked per row by ``prefix_lengths``, never
+    causally — chunk queries all sit after the committed prefix) plus
+    the chunk keys under the usual causal + ``lengths`` mask.
+    """
+    sp = 0
+    if k_prefix is not None:
+        assert v_prefix is not None and prefix_lengths is not None
+        assert lengths is not None, "prefix-KV path requires lengths"
+        sp = k_prefix.shape[2]
+        k = jnp.concatenate([k_prefix, k], axis=2)
+        v = jnp.concatenate([v_prefix, v], axis=2)
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
     group = h // kvh
@@ -20,13 +37,27 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     v = jnp.repeat(v, group, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * sm_scale
     col = jnp.arange(sk)
-    if lengths is not None:
-        # per-sequence valid-length mask (length-padded prefill batches)
-        s = jnp.where(col[None, None, None, :] < lengths[:, None, None, None],
-                      s, _NEG_INF)
-    if causal:
-        row = jnp.arange(sq)[:, None]
-        s = jnp.where(col[None, :] <= row, s, _NEG_INF)
+    row = jnp.arange(sq)[:, None]
+    if sp:
+        # keys are [prefix ; chunk]: prefix columns mask only by the
+        # committed length; chunk columns keep causal + lengths, shifted
+        cc = col[None, :] - sp
+        chunk_ok = cc < lengths[:, None]                 # (B, sk)
+        if causal:
+            chunk_ok = chunk_ok[:, None, :] & (cc[None] <= row)  # (B, sq, sk)
+        else:
+            chunk_ok = jnp.broadcast_to(chunk_ok[:, None, :], (b, sq, sk))
+        pref_ok = jnp.broadcast_to(
+            (col[None, :] < prefix_lengths[:, None])[:, None, :], (b, sq, sk))
+        mask = jnp.where(col[None, None, :] < sp, pref_ok, chunk_ok)
+        s = jnp.where(mask[:, None], s, _NEG_INF)
+    else:
+        if lengths is not None:
+            # per-sequence valid-length mask (length-padded prefill batches)
+            s = jnp.where(col[None, None, None, :] < lengths[:, None, None, None],
+                          s, _NEG_INF)
+        if causal:
+            s = jnp.where(col[None, :] <= row, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)

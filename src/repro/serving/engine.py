@@ -66,6 +66,31 @@ parity oracle and benchmark baseline.  The oracle contract is exact for
 greedy requests (``temperature == 0``); sampled requests draw one TRNG
 seed per fused *batch* vs one per eager *request*, so the two modes'
 random streams — and therefore sampled tokens — legitimately differ.
+
+Chunked prefill with decode-interleaved scheduling
+(``max_prefill_chunk=N``): a monolithic prefill batch makes in-flight
+decodes wait behind the whole prompt, so a long arriving prompt
+stretches every active request's inter-token latency by its full
+forward.  With a chunk budget set, prompts are split into
+``max_prefill_chunk``-sized chunks processed across successive engine
+rounds — each round runs at most ONE fused chunk batch (pending chunks
+fill the round's token budget, FIFO, same chunk-length bucket) *and*
+the fused decode round, so decodes emit a token every round regardless
+of arriving prompt length.  A chunk's queries attend causally over the
+chunk itself **plus**, non-causally, the sequence's already-committed
+arena KV (the flash kernel's prefix-KV operands; the prefix rides in as
+an in-scan arena gather over the sequence's block table, masked by the
+committed length).  Chunk KV scatters in-jit against the cache's
+per-chunk ``prefill_scatter_plan(start, stop)`` and is accounted as the
+same ``fused_prefill`` kind.  The prefix block table spans the
+sequence's FULL page list (valid length = committed tokens), so every
+chunk of one prompt shares one table-width bucket and chunk batches
+retrace only per distinct (chunk-bucket, batch-bucket, table-width)
+triple — never per chunk count.  ``stats["prefill_chunks"]`` counts
+chunks dispatched; ``stats["decode_stall_rounds"]`` counts rounds in
+which active decodes waited behind an over-budget (un-chunked) prefill
+— structurally zero when chunking is on, nonzero for the eager oracle
+fed the same long-prompt workload.
 """
 
 from __future__ import annotations
@@ -100,6 +125,33 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class _ChunkPrefill:
+    """A mid-prefill request on the chunk backlog: ``off`` tokens of its
+    prompt (shared prefix included) are committed to the arena.
+
+    ``dep``/``dep_len``: a prefix-sharing request reads its *source*
+    sequence's pages — under chunked prefill those commit across rounds,
+    so this state may not be scheduled until the source has committed at
+    least ``dep_len`` tokens (the monolithic path never sees this hazard
+    because all prefill completes before any decode).
+
+    ``write=False``: a prompt fully covered by a shared prefix has no KV
+    of its own to commit — it runs as a single 1-token chunk (the last
+    prompt position recomputed against the committed prefix) whose
+    scatter is suppressed, so even a very long covered sharer costs one
+    bounded chunk round, never a whole-prompt forward."""
+    req: Request
+    off: int
+    dep: Optional[int] = None
+    dep_len: int = 0
+    write: bool = True
+
+    @property
+    def remaining(self) -> int:
+        return len(self.req.prompt) - self.off
+
+
 class PagedEngine:
     """Single-host engine for GQA decoder-only models (the paged path)."""
 
@@ -108,6 +160,7 @@ class PagedEngine:
                  seed: int = 0, use_pallas: bool = False,
                  interpret: Optional[bool] = None, fused: bool = True,
                  fused_prefill: bool = True,
+                 max_prefill_chunk: Optional[int] = None,
                  lib=None, record_trace: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
@@ -126,16 +179,30 @@ class PagedEngine:
                           if interpret is None else interpret)
         self.fused = fused
         self.fused_prefill = fused_prefill
+        if max_prefill_chunk is not None and max_prefill_chunk < 1:
+            raise ValueError("max_prefill_chunk must be >= 1 (or None to "
+                             "disable chunked prefill)")
+        # chunked prefill: prompts longer than this are split into
+        # chunk-sized pieces processed across successive rounds, decode
+        # interleaved (None = monolithic: a prompt prefills whole)
+        self.max_prefill_chunk = max_prefill_chunk
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
+        # chunk backlog: requests mid-prefill under the chunked scheduler
+        self._chunk_q: List[_ChunkPrefill] = []
+        self._chunk_by_id: Dict[int, _ChunkPrefill] = {}
         self.rng_seed = jnp.asarray([seed, seed ^ 0x9E3779B9], jnp.uint32)
         self.rng_ctr = 0
         self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0,
                       "jit_traces": 0, "fused_dispatches": 0,
-                      "prefill_jit_traces": 0, "fused_prefill_dispatches": 0}
+                      "prefill_jit_traces": 0, "fused_prefill_dispatches": 0,
+                      "prefill_chunks": 0, "decode_stall_rounds": 0}
         self._step = self._build_fused_step() if fused else None
         self._prefill_step = (self._build_fused_prefill_step()
                               if fused_prefill else None)
+        self._chunk_step = (self._build_fused_chunk_step()
+                            if fused_prefill and max_prefill_chunk is not None
+                            else None)
         # decode tails already reserved this round (the pre-prefill
         # overlap path reserves early; _decode_round must not re-reserve)
         self._reserved_tails: set = set()
@@ -146,10 +213,21 @@ class PagedEngine:
         self.queue.append(req)
 
     def run(self, max_rounds: int = 1000) -> Dict[int, List[int]]:
+        """Engine rounds until done: every round runs (at most) one
+        prefill step AND the fused decode round.  With chunking on
+        (``max_prefill_chunk``), the prefill step is at most one fused
+        chunk batch — bounded work — so in-flight decodes emit a token
+        every round however long the arriving prompts are.  Without it,
+        the prefill step drains the whole queue (monolithic batches):
+        rounds where that overshoots the chunk budget while decodes
+        waited are counted in ``stats["decode_stall_rounds"]``."""
         results: Dict[int, List[int]] = {}
         rounds = 0
-        while (self.queue or self.active) and rounds < max_rounds:
-            if self.queue:
+        chunked = self.fused_prefill and self.max_prefill_chunk is not None
+        while ((self.queue or self._chunk_q or self.active)
+               and rounds < max_rounds):
+            had_active = bool(self.active)
+            if self.queue or self._chunk_q:
                 if self.active:
                     # overlap the pre-round CoW flush with prefill work:
                     # reserve the decode tails NOW and dispatch the
@@ -158,7 +236,17 @@ class PagedEngine:
                     # async), not in front of the decode step
                     self._reserve_tails(sorted(self.active))
                     self.cache.queue.flush_overlapped(self.cache.lib.flush)
-                self._prefill_round()
+                if chunked:
+                    prefill_toks = self._prefill_tick()
+                else:
+                    prefill_toks = self._prefill_round()
+                if (had_active and self.max_prefill_chunk is not None
+                        and prefill_toks > self.max_prefill_chunk):
+                    # an un-chunked prefill blew the per-round budget
+                    # while decodes were in flight: they waited behind
+                    # it — the latency chunking bounds.  Never
+                    # increments when the chunked scheduler is on.
+                    self.stats["decode_stall_rounds"] += 1
                 # a budget of 1 is satisfied by the prefill token alone:
                 # retire those now instead of decoding a surplus token
                 self._finish_done(results)
@@ -223,17 +311,41 @@ class PagedEngine:
         return jax.jit(step, donate_argnums=donate,
                        static_argnames=("has_writes",))
 
-    def _prefill_round(self) -> None:
+    def _build_fused_chunk_step(self):
+        """One jit covering a whole chunk batch: prefix-KV masked chunk
+        forward + in-jit chunk scatter + token selection.  Retraces only
+        per distinct (chunk-bucket, batch-bucket, table-width) triple —
+        counted in the same ``stats["prefill_jit_traces"]`` as the
+        monolithic prefill (the body only runs on a trace-cache miss)."""
+        eng = self
+
+        def step(params, toks, lens, offs, k_arena, v_arena, bt, plens,
+                 pages, slots, src, seed, temps, has_writes):
+            eng.stats["prefill_jit_traces"] += 1
+            return _fused_chunk_prefill_step(
+                eng.cfg, eng.pcfg, params, toks, lens, offs, k_arena,
+                v_arena, bt, plens, pages, slots, src, seed, temps,
+                has_writes=has_writes, use_pallas=eng.use_pallas,
+                interpret=eng.interpret)
+
+        donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(step, donate_argnums=donate,
+                       static_argnames=("has_writes",))
+
+    def _prefill_round(self) -> int:
         """Drain the request queue: one fused jitted dispatch per
         (length-bucket) prefill batch, or the eager per-request oracle
         with ``fused_prefill=False`` (exact parity for greedy requests;
         sampled requests consume the TRNG per batch vs per request, so
-        their streams differ by construction)."""
+        their streams differ by construction).  Returns the prompt
+        tokens processed (the round's prefill work, for stall
+        accounting)."""
         reqs, self.queue = self.queue, []
+        toks = sum(len(r.prompt) for r in reqs)
         if not self.fused_prefill:
             for r in reqs:
                 self._prefill(r)
-            return
+            return toks
         # create every sequence in submission order first, so shared
         # prefixes (`share_with`) resolve across bucket groups
         for r in reqs:
@@ -245,6 +357,168 @@ class PagedEngine:
             groups.setdefault(_bucket_pow2(len(r.prompt)), []).append(r)
         for sp in sorted(groups):
             self._prefill_batch_fused(groups[sp], sp)
+        return toks
+
+    # ---------------- chunked prefill (decode-interleaved) ------------- #
+
+    def _prefill_tick(self) -> int:
+        """One round's bounded prefill work under the chunked scheduler:
+        admit newly queued requests to the chunk backlog, then dispatch
+        at most ONE fused chunk batch — FIFO over the backlog, rows
+        sharing one chunk-length bucket, at most ``max_prefill_chunk``
+        real prompt tokens.  Unfinished prompts return to the backlog
+        front (their next chunk leads the next round), so a long prompt
+        streams across rounds while the decode round keeps dispatching
+        every round.  Returns the prompt tokens processed."""
+        self._admit_queue()
+        toks = 0
+        if not self._chunk_q:
+            return toks
+        budget = self.max_prefill_chunk
+        batch: List[tuple] = []          # (_ChunkPrefill, chunk_len)
+        keep: List[_ChunkPrefill] = []
+        sc = None                        # the batch's chunk-length bucket
+        for st in self._chunk_q:
+            if st.dep is not None:
+                if not self._source_committed(st.dep, st.dep_len):
+                    keep.append(st)      # shared pages not yet committed
+                    continue
+                st.dep = None            # satisfied once = satisfied forever
+            clen = min(self.max_prefill_chunk, st.remaining)
+            cb = _bucket_pow2(clen)
+            if batch and (cb != sc or clen > budget):
+                keep.append(st)
+                continue
+            sc = cb
+            batch.append((st, clen))
+            budget -= clen
+        self._chunk_q = keep
+        if not batch:
+            return toks
+        unfinished = self._prefill_chunk_batch_fused(batch, sc)
+        self._chunk_q = unfinished + self._chunk_q
+        return toks + sum(clen for _, clen in batch)
+
+    def _source_committed(self, src_id: Optional[int], n: int) -> bool:
+        """Has sequence ``src_id`` committed at least ``n`` prompt
+        tokens to the arena?  True when it is not mid-prefill (finished,
+        or never chunked); sharers gate on this before reading shared
+        pages."""
+        if src_id is None:
+            return True
+        st = self._chunk_by_id.get(src_id)
+        return st is None or st.off >= n
+
+    def _admit_queue(self) -> None:
+        """Create sequences for queued requests (submission order, so
+        ``share_with`` resolves) and push them onto the chunk backlog.
+
+        A prompt fully covered by a shared prefix has no KV of its own
+        to commit: it becomes a single NO-WRITE chunk — the last prompt
+        position recomputed against the committed prefix, scatter
+        suppressed — gated until the source commits the whole prompt.
+        That keeps even very long covered sharers inside the per-round
+        chunk budget (a whole-prompt forward here would reintroduce the
+        decode stall this scheduler exists to remove)."""
+        reqs, self.queue = self.queue, []
+        for r in reqs:
+            seq = self.cache.create(r.req_id, len(r.prompt),
+                                    share_with=r.share_with,
+                                    shared_len=r.shared_len)
+            off = seq.shared_prefix_pages * self.cache.page_size
+            n = len(r.prompt)
+            if off >= n:
+                st = _ChunkPrefill(r, n - 1, dep=r.share_with, dep_len=n,
+                                   write=False)
+            else:
+                st = _ChunkPrefill(r, off, dep=r.share_with, dep_len=off)
+            self._chunk_q.append(st)
+            self._chunk_by_id[r.req_id] = st
+
+    def _prefill_chunk_batch_fused(self, batch: List[tuple],
+                                   sc: int) -> List[_ChunkPrefill]:
+        """One compiled dispatch for a same-bucket batch of prefill
+        chunks: length-masked chunk forward with prefix-KV flash
+        attention over each sequence's committed arena pages (gathered
+        in-scan via the block table), in-jit chunk-KV scatter against
+        the cache's per-chunk plan, in-jit token selection.  One host
+        transfer per batch, consumed only by rows whose chunk completes
+        the prompt.  Returns the still-unfinished chunk states."""
+        # the step READS the arena (prefix gather): any pending backlog
+        # must land first
+        self.cache.flush_pending()
+        B = len(batch)
+        Bp = _bucket_pow2(B)
+        idx = list(range(B)) + [0] * (Bp - B)   # pad rows duplicate row 0
+        toks = np.zeros((Bp, sc), np.int32)
+        lens = np.zeros((Bp,), np.int32)
+        offs = np.zeros((Bp,), np.int32)
+        temps = np.zeros((Bp,), np.float32)
+        for row, i in enumerate(idx):
+            st, clen = batch[i]
+            toks[row, :clen] = st.req.prompt[st.off:st.off + clen]
+            lens[row] = clen
+            offs[row] = st.off
+            temps[row] = st.req.temperature
+        # prefix block table over each sequence's FULL page list, valid
+        # length = committed tokens: the width bucket is per-prompt
+        # constant, so chunk count never forces a retrace
+        rids = [batch[i][0].req.req_id for i in idx]
+        bt, plens = self.cache.block_table(rids,
+                                           lengths=[int(o) for o in offs])
+        pages: List[int] = []
+        slots: List[int] = []
+        src: List[int] = []
+        for i, (st, clen) in enumerate(batch):
+            if not st.write:             # covered sharer: recompute only
+                continue
+            seq = self.cache.seqs[st.req.req_id]
+            p_i, s_i = self.cache.prefill_scatter_plan(seq, start=st.off,
+                                                       stop=st.off + clen)
+            pages += p_i
+            slots += s_i
+            src += [i * sc + j for j in range(clen)]
+        # pad entries duplicate entry 0 (identical (page, slot, value)
+        # writes are a deterministic no-op); an all-no-write batch skips
+        # the scatter entirely (has_writes=False, its own trace)
+        n_valid = len(pages)
+        N = Bp * sc
+        if n_valid:
+            pages += [pages[0]] * (N - n_valid)
+            slots += [slots[0]] * (N - n_valid)
+            src += [src[0]] * (N - n_valid)
+        else:
+            pages = [0] * N
+            slots = [0] * N
+            src = [0] * N
+        self.rng_ctr += 1
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        tokens, k_arena, v_arena = self._chunk_step(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(offs), self.cache.k_arena, self.cache.v_arena,
+            bt, plens, jnp.asarray(pages, jnp.int32),
+            jnp.asarray(slots, jnp.int32), jnp.asarray(src, jnp.int32),
+            seed, jnp.asarray(temps), has_writes=n_valid > 0)
+        # chunk scatters account as the fused_prefill kind, same as the
+        # monolithic batch (PimOpQueue.launches_by_kind, trace kv_writes)
+        self.cache.commit_fused_prefill(k_arena, v_arena, pages[:n_valid],
+                                        slots[:n_valid])
+        self.stats["prefill_chunks"] += B
+        self.stats["fused_prefill_dispatches"] += 1
+        toks_np = None
+        unfinished: List[_ChunkPrefill] = []
+        for i, (st, clen) in enumerate(batch):
+            st.off += clen
+            if st.remaining <= 0:
+                if toks_np is None:         # the batch's one host transfer
+                    toks_np = np.asarray(tokens)
+                st.req.out_tokens.append(int(toks_np[i]))
+                self.active[st.req.req_id] = st.req
+                self.stats["prefills"] += 1
+                del self._chunk_by_id[st.req.req_id]
+            else:
+                unfinished.append(st)
+        return unfinished
 
     def _prefill_batch_fused(self, reqs: List[Request], sp: int) -> None:
         """One compiled dispatch for a same-length-bucket prefill batch;
@@ -491,6 +765,102 @@ def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
     tokens = _select_tokens(logits, temps, seed, use_pallas=use_pallas,
                             interpret=interpret)
     return tokens, k_arena, v_arena
+
+
+def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
+                              v_arena, bt, plens, pages, slots, src, seed,
+                              temps, *, has_writes: bool, use_pallas: bool,
+                              interpret: bool):
+    """Chunk forward (prefix-KV attention over committed arena pages) +
+    in-jit chunk-KV scatter + token selection: one prefill chunk batch
+    as one compiled program over donated arenas.
+
+    ``pages``/``slots``/``src`` are the chunk scatter plan, exactly as
+    in :func:`_fused_prefill_step`; ``offs`` (B,) are the chunks'
+    absolute position offsets (RoPE), ``bt``/``plens`` the prefix block
+    tables and committed lengths.  ``has_writes=False`` (static: a batch
+    of only no-write covered-sharer chunks) skips the scatter.  The
+    scatter is traced *after* the forward's arena reads, so XLA orders
+    the prefix gather before the in-place update on donated buffers.
+    """
+    logits, k_all, v_all = _chunk_prefill_forward(
+        cfg, pcfg, params, toks, lens, offs, k_arena, v_arena, bt, plens,
+        use_pallas=use_pallas, interpret=interpret)
+    L = k_all.shape[0]
+    Bp, Sp = toks.shape
+
+    def scatter(arena, new_all):
+        flat = new_all.reshape((L, Bp * Sp) + new_all.shape[3:])[:, src]
+        return rc_ops.kv_scatter_inline(arena, pages, slots,
+                                        flat.astype(arena.dtype),
+                                        use_pallas=use_pallas,
+                                        interpret=interpret)
+
+    if has_writes:
+        k_arena = scatter(k_arena, k_all)
+        v_arena = scatter(v_arena, v_all)
+    tokens = _select_tokens(logits, temps, seed, use_pallas=use_pallas,
+                            interpret=interpret)
+    return tokens, k_arena, v_arena
+
+
+def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
+                           k_arena, v_arena, bt, plens, *,
+                           use_pallas: bool = False, interpret: bool = True):
+    """Batched forward over one prefill *chunk* per row: ``lax.scan``
+    over the stacked layer params AND the per-layer arena slices, with
+    prefix-KV flash attention — each row's queries attend causally over
+    the chunk and non-causally over the row's already-committed arena KV
+    (gathered through its block table, masked at ``plens[b]`` so partial
+    tail pages and table padding never leak).
+
+    toks: (B, S) int32 chunk tokens; lens: (B,) valid chunk lengths
+    (>= 1); offs: (B,) absolute position of each chunk's first token
+    (drives RoPE); bt: (B, W) prefix block tables; plens: (B,) committed
+    prefix lengths (0 = no prefix).  Returns (last-real-chunk-token
+    logits (B, V), k_all, v_all (L, B, S, kvh, hd))."""
+    hd = cfg.resolved_head_dim
+    B, S = toks.shape
+    ps = k_arena.shape[2]                # page size
+    W = bt.shape[1]
+    x = embed(params["embed"], toks, cfg)
+    positions = offs[:, None] + jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32), (B, S))
+    sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+    kinds = T.layer_groups(cfg)[0][1]
+
+    def body(x, xs):
+        p_layer, k_l, v_l = xs           # k_l: (pages, ps, kvh, hd)
+
+        def attend(q, k, v):
+            # gather this layer's committed prefix: (B, W*ps, kvh, hd)
+            kp = k_l[bt].reshape(B, W * ps, k_l.shape[-2], k_l.shape[-1])
+            vp = v_l[bt].reshape(B, W * ps, v_l.shape[-2], v_l.shape[-1])
+            o = fa_ops.attention_inline(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=True, sm_scale=hd ** -0.5,
+                lengths=lens, k_prefix=kp.transpose(0, 2, 1, 3),
+                v_prefix=vp.transpose(0, 2, 1, 3), prefix_lengths=plens,
+                use_pallas=use_pallas, interpret=interpret)
+            return o.transpose(0, 2, 1, 3)
+
+        k_toks = v_toks = None
+        for i, kind in enumerate(kinds):
+            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
+                                  sin, cos, attend)
+            if kv is not None:
+                k_toks, v_toks = kv
+        return x, (k_toks, v_toks)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x, (params["group0"], k_arena, v_arena))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # each row's last REAL chunk token (pad rows mirror row 0, lens >= 1)
+    x_last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
+    logits = logits_out(params["embed"], x_last, cfg,
+                        fp32=pcfg.logits_fp32)
+    return logits[:, 0], k_all, v_all
 
 
 def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,

@@ -279,16 +279,21 @@ class PagedKVCache:
         self.queue.enqueue_kv_writes(pages, slots, k, v)
         self.flush_pending()
 
-    def prefill_scatter_plan(self, seq: Sequence,
-                             start: int = 0) -> Tuple[List[int], List[int]]:
+    def prefill_scatter_plan(self, seq: Sequence, start: int = 0,
+                             stop: Optional[int] = None,
+                             ) -> Tuple[List[int], List[int]]:
         """Host-side arena-destination plan for a prefilled prompt: the
-        (page, slot) pair per position in ``[start, seq.length)``.  The
-        engine's fused prefill step scatters the forward's fresh KV
-        against this plan *inside* the jit (no ``write_prompt_kv``
-        host round-trip); ``start`` skips a shared prefix."""
-        pages = [seq.pages[s // self.page_size]
-                 for s in range(start, seq.length)]
-        slots = [s % self.page_size for s in range(start, seq.length)]
+        (page, slot) pair per position in ``[start, stop)`` (``stop``
+        defaults to ``seq.length``).  The engine's fused prefill step
+        scatters the forward's fresh KV against this plan *inside* the
+        jit (no ``write_prompt_kv`` host round-trip); ``start`` skips a
+        shared prefix.  The chunked-prefill scheduler calls this once
+        per chunk — ``start``/``stop`` are the chunk's absolute position
+        offsets, so successive chunks tile ``[prefix, seq.length)``."""
+        if stop is None:
+            stop = seq.length
+        pages = [seq.pages[s // self.page_size] for s in range(start, stop)]
+        slots = [s % self.page_size for s in range(start, stop)]
         return pages, slots
 
     def free(self, seq_id: int) -> None:
@@ -348,7 +353,9 @@ class PagedKVCache:
         self.queue.count_external("fused_prefill")
 
     def block_table(self, seq_ids: List[int],
-                    max_pages: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+                    max_pages: Optional[int] = None,
+                    lengths: Optional[List[int]] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
         """Block tables + lengths for ``seq_ids``.
 
         Bucketing contract: the table width is ``max_pages`` rounded up
@@ -356,7 +363,14 @@ class PagedKVCache:
         not given), so growing sequences hit a new jit trace only at
         power-of-two page-count boundaries instead of every round.
         Padding columns point at page 0 and are never attended — the
-        kernels mask all positions at or beyond ``lengths[b]``."""
+        kernels mask all positions at or beyond ``lengths[b]``.
+
+        ``lengths`` overrides the per-sequence valid length (defaults to
+        ``seq.length``): the chunked prefill uses it to expose only the
+        already-*committed* prefix of a mid-prefill sequence, while the
+        table still spans the sequence's full page list — so every chunk
+        of one prompt shares one table-width bucket (no retrace per
+        chunk)."""
         if max_pages is None:
             max_pages = max(len(self.seqs[sid].pages) for sid in seq_ids)
         max_pages = _bucket_pow2(max_pages)
@@ -365,7 +379,7 @@ class PagedKVCache:
         for i, sid in enumerate(seq_ids):
             seq = self.seqs[sid]
             bt[i, :len(seq.pages)] = seq.pages
-            lens[i] = seq.length
+            lens[i] = seq.length if lengths is None else lengths[i]
         return jnp.asarray(bt), jnp.asarray(lens)
 
     @property

@@ -243,6 +243,86 @@ class TestFlashAttention:
                                    rtol=3e-5, atol=3e-5)
 
 
+class TestFlashPrefixKV:
+    """The chunked-prefill prefix-KV path: chunk queries attend causally
+    over the chunk plus non-causally over already-committed prefix KV
+    with its own per-row length mask."""
+
+    @staticmethod
+    def _qkv(rng, b, h, kvh, s, d):
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, kvh, s, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, kvh, s, d)).astype(np.float32))
+        return q, k, v
+
+    def test_composes_with_full_sequence_oracle(self):
+        # split a full causal attention at s0: prefix KV + chunk queries
+        # through the prefix path must equal the full run's chunk rows —
+        # the prefix and chunk masks compose into plain causal attention
+        rng = np.random.default_rng(7)
+        b, h, kvh, s, s0, d = 2, 4, 2, 24, 10, 16
+        q, k, v = self._qkv(rng, b, h, kvh, s, d)
+        lens = jnp.asarray([24, 17], jnp.int32)
+        full = fa_ref.attention(q, k, v, causal=True, lengths=lens)
+        qc, kc, vc = q[:, :, s0:], k[:, :, s0:], v[:, :, s0:]
+        kp, vp = k[:, :, :s0], v[:, :, :s0]
+        plens = jnp.asarray([s0, s0], jnp.int32)
+        clens = lens - s0
+        for impl, kw in ((fa_ref.attention, {}),
+                         (fa.flash_attention,
+                          dict(block_q=8, block_k=8, interpret=True))):
+            out = impl(qc, kc, vc, causal=True, lengths=clens,
+                       k_prefix=kp, v_prefix=vp, prefix_lengths=plens, **kw)
+            for bi in range(b):
+                n = int(clens[bi])       # rows past lens are undefined
+                np.testing.assert_allclose(
+                    np.asarray(out)[bi, :, :n],
+                    np.asarray(full)[bi, :, s0:s0 + n],
+                    rtol=3e-5, atol=3e-5)
+
+    def test_empty_prefix_degenerates_to_plain_path(self):
+        # prefix_lengths == 0 must reproduce the prefix-less kernel
+        # exactly (the PR 4 fused-prefill behavior)
+        rng = np.random.default_rng(8)
+        b, h, kvh, s, sp, d = 2, 4, 2, 16, 12, 16
+        q, k, v = self._qkv(rng, b, h, kvh, s, d)
+        kp = jnp.asarray(rng.normal(size=(b, kvh, sp, d)).astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(b, kvh, sp, d)).astype(np.float32))
+        lens = jnp.asarray([16, 11], jnp.int32)
+        zero = jnp.zeros((b,), jnp.int32)
+        plain = fa.flash_attention(q, k, v, causal=True, block_q=8,
+                                   block_k=8, lengths=lens, interpret=True)
+        with_pref = fa.flash_attention(q, k, v, causal=True, block_q=8,
+                                       block_k=8, lengths=lens, k_prefix=kp,
+                                       v_prefix=vp, prefix_lengths=zero,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(with_pref), np.asarray(plain),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_kernel_matches_ref_ragged(self):
+        # per-row ragged prefix AND chunk lengths, tile sizes that force
+        # kv blocks to straddle the prefix/chunk boundary: kernel vs ref
+        rng = np.random.default_rng(9)
+        b, h, kvh, sc, sp, d = 3, 4, 2, 20, 24, 16
+        q, kc, vc = self._qkv(rng, b, h, kvh, sc, d)
+        kp = jnp.asarray(rng.normal(size=(b, kvh, sp, d)).astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(b, kvh, sp, d)).astype(np.float32))
+        plens = jnp.asarray([0, 13, 24], jnp.int32)
+        lens = jnp.asarray([20, 7, 1], jnp.int32)
+        out = fa.flash_attention(q, kc, vc, causal=True, block_q=8,
+                                 block_k=16, lengths=lens, k_prefix=kp,
+                                 v_prefix=vp, prefix_lengths=plens,
+                                 interpret=True)
+        expect = fa_ref.attention(q, kc, vc, causal=True, lengths=lens,
+                                  k_prefix=kp, v_prefix=vp,
+                                  prefix_lengths=plens)
+        for bi in range(b):              # rows past lens are undefined
+            n = int(lens[bi])
+            np.testing.assert_allclose(np.asarray(out)[bi, :, :n],
+                                       np.asarray(expect)[bi, :, :n],
+                                       rtol=3e-5, atol=3e-5)
+
+
 class TestPagedAttention:
     @settings(**SETTINGS)
     @given(b=st.integers(1, 3), kvh=st.sampled_from([1, 2, 4]),

@@ -180,6 +180,188 @@ class TestPrefillParity:
         assert outs[0] == outs[1]
 
 
+class TestChunkedPrefill:
+    """Chunked prefill with decode-interleaved scheduling
+    (``max_prefill_chunk``): prompts longer than one chunk stream across
+    rounds through the prefix-KV flash path, pinned against the same
+    eager oracle as the monolithic fused prefill."""
+
+    CHUNK = 8
+
+    def _pair(self, cfg, params, **kw):
+        chunked = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                              max_prefill_chunk=self.CHUNK, **kw)
+        eager = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                            fused_prefill=False, **kw)
+        return chunked, eager
+
+    @staticmethod
+    def _drain_prefill(eng):
+        """Run prefill ticks (no decode) until nothing is mid-prefill."""
+        while eng.queue or eng._chunk_q:
+            eng._prefill_tick()
+
+    def test_chunk_straddling_lengths_match_eager(self, model, rng):
+        """7/9/17/23/32 with an 8-token chunk cover: single sub-chunk
+        prompts, chunk-exact prompts, and 2-4 chunk prompts with ragged
+        tails.  Token AND arena parity against the eager oracle after
+        every prompt's prefill, then decode-round parity."""
+        cfg, params = model
+        chunked, eager = self._pair(cfg, params)
+        for i, n in enumerate((7, 9, 17, 23, 32)):
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            req = Request(i, prompt, max_new_tokens=2, temperature=0.0)
+            _submit_all((chunked, eager), [req])
+            self._drain_prefill(chunked)
+            eager._prefill_round()
+            _arenas_equal(chunked, eager)   # chunk KV committed identically
+            assert (chunked.active[i].out_tokens
+                    == eager.active[i].out_tokens), n
+        assert chunked.run() == eager.run()
+        # 5 prompts, chunk cover of ceil(n/8) each: 1+2+3+3+4
+        assert chunked.stats["prefill_chunks"] == 13
+        assert chunked.stats["decode_stall_rounds"] == 0
+
+    def test_shared_prefix_composes_with_chunking(self, model, rng):
+        """A chunked source plus a partially-covered and a fully-covered
+        sharer: the sharers' chunk/first-token work is gated until the
+        source commits the shared pages, and results match the eager
+        oracle (which prefills everything before any decode)."""
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        chunked, eager = self._pair(cfg, params)
+        reqs = [Request(0, prompt, max_new_tokens=3, temperature=0.0),
+                Request(1, prompt, max_new_tokens=3, temperature=0.0,
+                        share_with=0, shared_len=12),
+                Request(2, prompt, max_new_tokens=3, temperature=0.0,
+                        share_with=0, shared_len=16)]
+        _submit_all((chunked, eager), reqs)
+        res_c, res_e = chunked.run(), eager.run()
+        assert res_c == res_e
+        assert res_c[0] == res_c[1] == res_c[2]
+        assert (chunked.cache.stats["prefix_hits"]
+                == eager.cache.stats["prefix_hits"] == 2)
+        # a fully-covered sharer is ONE no-write chunk — even arriving
+        # while its source decodes, it never busts the round budget
+        # (the whole-prompt forward a covered sharer used to trigger
+        # would stall every in-flight decode behind it)
+        assert chunked.stats["decode_stall_rounds"] == 0
+        assert chunked.stats["prefill_chunks"] == 2 + 1 + 1  # 16tok,4tok,1tok
+
+    def test_chunk_forward_matches_dense_logits(self, model, rng):
+        """Logit-level parity of the prefix-KV chunk forward against the
+        dense full-prompt oracle: after chunk 1 commits, chunk 2's
+        last-token logits must match ``T.forward`` over the whole prompt
+        at that position (bf16 resolution), and its fresh K/V must match
+        the dense cache slice the scatter plan would write."""
+        from repro.serving import engine as E
+        cfg, params = model
+        n, c = 12, self.CHUNK
+        prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                          max_prefill_chunk=c)
+        eng.submit(Request(0, prompt, max_new_tokens=1, temperature=0.0))
+        eng._prefill_tick()              # chunk 1: positions [0, 8)
+        seq = eng.cache.seqs[0]
+        clen = n - c                     # chunk 2: positions [8, 12)
+        toks = np.zeros((1, clen), np.int32)
+        toks[0] = prompt[c:]
+        bt, plens = eng.cache.block_table([0], lengths=[c])
+        lg_c, k_all, v_all = E._chunk_prefill_forward(
+            cfg, PCFG, params, jnp.asarray(toks),
+            jnp.asarray([clen], jnp.int32), jnp.asarray([c], jnp.int32),
+            eng.cache.k_arena, eng.cache.v_arena, bt, plens,
+            use_pallas=False, interpret=True)
+        cache = T.init_cache(cfg, 1, n)
+        lg_e, dense, _ = T.forward(
+            cfg, PCFG, params, {"tokens": jnp.asarray(prompt)[None]},
+            mode="prefill", cache=cache, lengths=jnp.asarray([n], jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg_c[0]),
+                                   np.asarray(lg_e[0, -1]),
+                                   rtol=2e-2, atol=2e-2)
+        k_e, v_e = dense["group0"]["0_attn"]   # (L, 1, n, kvh, hd)
+        np.testing.assert_allclose(
+            np.asarray(k_all[:, 0], np.float32),
+            np.asarray(k_e[:, 0, c:], np.float32), rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(
+            np.asarray(v_all[:, 0], np.float32),
+            np.asarray(v_e[:, 0, c:], np.float32), rtol=2e-2, atol=2e-2)
+
+    def test_decode_emits_every_round_during_long_prefill(self, model, rng):
+        """The starvation regression: with a decode in flight, a 4-chunk
+        prompt streams across rounds and the decode request still emits
+        exactly one token per round; ``decode_stall_rounds`` stays 0.
+        The eager oracle fed the same workload (whole-prompt prefill)
+        records the stall the chunked scheduler removes."""
+        cfg, params = model
+        short = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+        long = rng.integers(0, cfg.vocab_size, 4 * self.CHUNK).astype(np.int32)
+
+        def feed(eng):
+            eng.submit(Request(0, short.copy(), max_new_tokens=12,
+                               temperature=0.0))
+            eng.run(max_rounds=2)        # prefill + first decode round
+            eng.submit(Request(1, long.copy(), max_new_tokens=2,
+                               temperature=0.0))
+
+        chunked = PagedEngine(cfg, params, page_size=4, num_pages=256,
+                              max_prefill_chunk=self.CHUNK)
+        feed(chunked)
+        base_chunks = chunked.stats["prefill_chunks"]   # the short prompt
+        deltas = []
+        while chunked.queue or chunked.active or chunked._chunk_q:
+            before = (len(chunked.active[0].out_tokens)
+                      if 0 in chunked.active else None)
+            chunked.run(max_rounds=1)
+            if before is not None and 0 in chunked.active:
+                deltas.append(len(chunked.active[0].out_tokens) - before)
+        assert deltas and all(d == 1 for d in deltas), deltas
+        assert chunked.stats["prefill_chunks"] - base_chunks == 4
+        assert chunked.stats["decode_stall_rounds"] == 0
+        # same workload, un-chunked prefill: the decode stalled behind it
+        eager = PagedEngine(cfg, params, page_size=4, num_pages=256,
+                            fused_prefill=False,
+                            max_prefill_chunk=self.CHUNK)
+        feed(eager)
+        eager.run()
+        assert eager.stats["decode_stall_rounds"] >= 1
+
+    def test_no_new_trace_per_chunk_count(self, model, rng):
+        """Chunk batches retrace per distinct (chunk-bucket, batch-bucket,
+        table-width) triple, never per chunk count: a 17-token prompt
+        (3 chunks) and a 25-token prompt (4 chunks) share every bucket,
+        so the second compiles NOTHING new — and neither does a rerun."""
+        cfg, params = model
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=256,
+                          max_prefill_chunk=self.CHUNK)
+        traces = []
+        for i, n in enumerate((17, 25, 17)):
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new_tokens=1, temperature=0.0))
+            TestChunkedPrefill._drain_prefill(eng)
+            traces.append(eng.stats["prefill_jit_traces"])
+        # full chunks (bucket 8) + ragged tail (bucket 1) compile once;
+        # more chunks of the same shape never compile again
+        assert traces[0] == traces[1] == traces[2], traces
+        eng.run()      # drain so the arena frees cleanly
+
+    def test_pallas_path_matches_reference(self, model, rng):
+        """The Pallas prefix-KV flash kernel drives chunked prefill to
+        the same tokens as the jnp reference path."""
+        cfg, params = model
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (7, 19)]
+        outs = []
+        for use_pallas in (False, True):
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                              max_prefill_chunk=self.CHUNK,
+                              use_pallas=use_pallas, interpret=True)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(i, p, max_new_tokens=2, temperature=0.0))
+            outs.append(eng.run())
+        assert outs[0] == outs[1]
+
+
 class TestPrefillRetrace:
     def test_traces_bounded_by_distinct_buckets(self, model, rng):
         """N prompts of varied lengths compile at most one trace per

@@ -229,6 +229,27 @@ class TestDispatchCounts:
                   ((1, 1, 7), (2, 3, 7), (4, 2, 14))]
         assert set(counts) == {1}, counts
 
+    def test_chunked_prefill_chunks_account_as_fused_prefill(self, rng):
+        """Every chunk batch is ONE dispatch accounted under the same
+        ``fused_prefill`` kind as monolithic batches — a 3-chunk prompt
+        shows 3 fused_prefill launches and nothing else, independent of
+        layer count."""
+        for layers in (1, 2):
+            cfg = reduced(ARCHS["granite-3-8b"], num_layers=layers)
+            params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+            eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                              max_prefill_chunk=8)
+            prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+            eng.submit(Request(0, prompt, max_new_tokens=1, temperature=0.0))
+            base = eng.cache.queue.stats["launches"]
+            base_kind = eng.cache.queue.launches_by_kind.get("fused_prefill", 0)
+            while eng.queue or eng._chunk_q:
+                eng._prefill_tick()
+            assert (eng.cache.queue.launches_by_kind["fused_prefill"]
+                    - base_kind == 3)
+            assert eng.cache.queue.stats["launches"] - base == 3
+            assert eng.stats["prefill_chunks"] == 3
+
 
 class TestFusedDecode:
     """The fused single-dispatch decode round: jitted scan-over-layers

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Markdown link + stale-path check for the docs tree (no deps).
+
+Checked files: README.md, ROADMAP.md, and everything under docs/.
+
+Two classes of reference are verified:
+
+* **Markdown links** ``[text](target)`` with a relative target (http(s)
+  and mailto links are skipped): the target file must exist, resolved
+  against the referencing file's directory.  Anchors (``#...``) are
+  stripped.  Checked in ALL files.
+
+* **Backticked path references** — inline code spans that look like a
+  repo path (``serving/engine.py``, ``docs/serving.md``,
+  ``benchmarks/serving_e2e.py``) or a module path (``repro.core.x``):
+  the file must exist relative to the repo root (paths also tried under
+  ``src/``; module paths resolve under ``src/`` as a module or
+  package).  This is what catches stale references like
+  ``serving/pim_queue.py`` after a relocation.  Only enforced for
+  README.md and docs/ — ROADMAP.md narrates history ("the
+  serving/pim_queue.py shim ... retired"), where a now-dead path is the
+  point, not a mistake.
+
+Exit status 0 = clean; 1 = stale references found (listed on stderr).
+Run:  python tools/check_links.py   (CI's docs job does)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# a backticked span counts as a path reference if it is a relative path
+# with at least one directory component ending in a known extension
+# (bare filenames like `trace.py` are contextual, not checkable), or a
+# repro.* module path
+PATHLIKE = re.compile(r"^[\w][\w.-]*(?:/[\w.-]+)+\.(?:py|md|json|toml|txt|yml)$")
+MODULELIKE = re.compile(r"^repro(?:\.\w+)+$")
+
+
+def checked_files():
+    for name in ("README.md", "ROADMAP.md"):
+        p = ROOT / name
+        if p.exists():
+            yield p
+    yield from sorted((ROOT / "docs").glob("**/*.md"))
+
+
+def path_exists(ref: str) -> bool:
+    if MODULELIKE.match(ref):
+        rel = Path("src", *ref.split("."))
+        return ((ROOT / rel).with_suffix(".py").exists()
+                or (ROOT / rel / "__init__.py").exists())
+    # try repo-root-relative, then the two source prefixes docs elide
+    return any((ROOT / prefix / ref).exists()
+               for prefix in ("", "src", "src/repro"))
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (path.parent / target).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    if path.name == "ROADMAP.md":        # historical narration: links only
+        return errors
+    for m in CODE_SPAN.finditer(text):
+        ref = m.group(1).strip()
+        if not (PATHLIKE.match(ref) or MODULELIKE.match(ref)):
+            continue
+        if not path_exists(ref):
+            errors.append(f"{path.relative_to(ROOT)}: stale path -> {ref}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    n = 0
+    for path in checked_files():
+        n += 1
+        errors += check_file(path)
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"FAIL: {len(errors)} stale reference(s) across {n} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"OK: {n} markdown file(s), all links and path references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
