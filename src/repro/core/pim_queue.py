@@ -176,6 +176,22 @@ class PimOpQueue:
         self.launches_by_kind.setdefault(kind, 0)
         self._count_launch(kind, n)
 
+    def snapshot(self) -> Dict[str, int]:
+        """Point-in-time copy of ``launches_by_kind`` for delta-based
+        dispatch accounting: take one before a window of engine rounds,
+        diff with :meth:`delta` after, and you have exactly the
+        dispatches that window cost — the dispatches-per-token
+        regression tests and the K-sweep benchmark both measure this
+        way instead of trusting engine-side mirrors."""
+        return dict(self.launches_by_kind)
+
+    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        """Per-kind launches since ``before`` (a :meth:`snapshot`),
+        zero-count kinds omitted."""
+        return {k: v - before.get(k, 0)
+                for k, v in self.launches_by_kind.items()
+                if v - before.get(k, 0)}
+
     def flush_overlapped(self, flush: Callable[[], None]) -> bool:
         """Dispatch the pending backlog NOW so its device-side work runs
         behind upcoming host-side work (JAX dispatch is asynchronous).

@@ -4,6 +4,18 @@
 is the same dispatch logic without the jit wrapper, for callers that are
 already inside a compiled computation (the serving engine's fused decode
 step traces it inside one outer ``jax.jit``).
+
+Multi-round contract: the engine's persistent decode loop
+(``decode_block_rounds=K``) traces this kernel inside a
+``jax.lax.while_loop`` body, so ``lengths`` may be a *loop carry* (each
+in-loop round advances live rows' lengths on device) while
+``block_tables`` stays a loop constant spanning the pages reserved for
+the whole K-token block.  Both are ordinary traced operands here —
+nothing in the dispatch may specialize on their values, only on shapes;
+use the ``_inline`` form for this (the jitted wrapper would nest a jit
+inside the loop body).  Positions at or beyond ``lengths[b]`` are
+masked, so the over-reserved tail pages of a mid-block sequence are
+never attended.
 """
 
 from __future__ import annotations

@@ -122,3 +122,23 @@ def kv_scatter_inline(arena: jax.Array, pages: jax.Array, slots: jax.Array,
 pim_kv_scatter = functools.partial(
     jax.jit, static_argnames=("use_pallas", "interpret"),
     donate_argnums=(0,))(kv_scatter_inline)
+
+
+def kv_gather_inline(arena: jax.Array, pages: jax.Array,
+                     slots: jax.Array) -> jax.Array:
+    """Read ``arena[:, pages[b], slots[b]]`` -> (layers, batch, ...) —
+    the scatter's inverse, for callers already inside a compiled
+    computation.
+
+    The serving engine's multi-round decode loop uses this for its
+    masked write-back: a sequence that stopped (EOS/budget) mid-block
+    writes the value *already in its slot* back to it, so the scatter
+    stays a structural no-op for dead rows and the arena is bit-identical
+    to a round-at-a-time run.  Reads have no Pallas variant (XLA fuses
+    the gather into the surrounding step); only mutations are RowClone
+    hot spots.
+    """
+    L, P, S = arena.shape[:3]
+    a4 = arena.reshape(L, P, S, -1)
+    out = ref.kv_gather(a4, pages, slots)
+    return out.reshape((L, pages.shape[0]) + arena.shape[3:])

@@ -91,6 +91,33 @@ chunks dispatched; ``stats["decode_stall_rounds"]`` counts rounds in
 which active decodes waited behind an over-budget (un-chunked) prefill
 — structurally zero when chunking is on, nonzero for the eager oracle
 fed the same long-prompt workload.
+
+Multi-round fusion (the "one dispatch per N rounds" step).  Two layers:
+
+* **Mixed rounds** (``mixed_rounds=True``, chunked + fused): a round
+  that runs both a chunk batch and a decode round used to cost two
+  jitted dispatches; they already share ``_sublayer``, the donated
+  arenas, and bucketed shapes, so the engine traces them as ONE program
+  — the chunk half's first tokens wire straight into the decode half's
+  inputs (``d_from_chunk``), the chunk KV scatter is traced before the
+  decode forward so a prompt finishing this round decodes against its
+  own just-written KV, and the whole mixed round is accounted as ONE
+  ``fused_mixed`` launch (``stats["mixed_dispatches"]``).
+* **K-blocked decode** (``decode_block_rounds=K``): when no admissions
+  are pending, the engine runs up to K decode rounds inside a
+  ``jax.lax.while_loop`` in ONE dispatch — one host round-trip (and one
+  token transfer) per K tokens.  The host reserves every row's K-token
+  arena capacity up front (``PagedKVCache.reserve_tokens``) so each
+  in-loop round has a host-planned (page, slot) destination; in-loop
+  stop detection covers per-request EOS and token budgets, and a row
+  that stops writes the value *already in its slot* back to it (a
+  masked write-back via ``kv_gather_inline``) so the scatter stays a
+  structural no-op for dead rows and the arena is bit-identical to a
+  round-at-a-time run.  Blocks are counted in
+  ``stats["multi_round_blocks"]``; the per-block launch is the
+  ``fused_decode_block`` kind, so dispatches-per-token falls below 1
+  after warmup.  ``decode_block_rounds=1`` (default) and the eager path
+  are kept as round-at-a-time oracles.
 """
 
 from __future__ import annotations
@@ -119,6 +146,10 @@ class Request:
     prompt: np.ndarray                    # (prompt_len,) int32
     max_new_tokens: int = 16
     temperature: float = 1.0
+    # stop generating after emitting this token (the EOS token itself is
+    # kept in out_tokens); None = budget-only stopping.  The K-blocked
+    # decode loop detects this on device, between host round-trips.
+    eos_token_id: Optional[int] = None
     share_with: Optional[int] = None      # prefix sharing source
     shared_len: int = 0
     out_tokens: List[int] = field(default_factory=list)
@@ -161,6 +192,7 @@ class PagedEngine:
                  interpret: Optional[bool] = None, fused: bool = True,
                  fused_prefill: bool = True,
                  max_prefill_chunk: Optional[int] = None,
+                 decode_block_rounds: int = 1, mixed_rounds: bool = True,
                  lib=None, record_trace: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
@@ -186,6 +218,18 @@ class PagedEngine:
         # chunk-sized pieces processed across successive rounds, decode
         # interleaved (None = monolithic: a prompt prefills whole)
         self.max_prefill_chunk = max_prefill_chunk
+        if decode_block_rounds < 1:
+            raise ValueError("decode_block_rounds must be >= 1")
+        if decode_block_rounds > 1 and not fused:
+            raise ValueError("decode_block_rounds > 1 requires fused=True "
+                             "(the eager path is the round-at-a-time oracle)")
+        # persistent decode loop: with no admissions pending, run up to K
+        # decode rounds per host round-trip in one lax.while_loop dispatch
+        # (1 = round-at-a-time, the single-round fused oracle)
+        self.decode_block_rounds = decode_block_rounds
+        # fuse a round's chunk batch + decode round into one dispatch
+        # (only reachable with chunking + both fused paths on)
+        self.mixed_rounds = mixed_rounds
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         # chunk backlog: requests mid-prefill under the chunked scheduler
@@ -196,13 +240,20 @@ class PagedEngine:
         self.stats = {"prefills": 0, "decode_rounds": 0, "tokens_out": 0,
                       "jit_traces": 0, "fused_dispatches": 0,
                       "prefill_jit_traces": 0, "fused_prefill_dispatches": 0,
-                      "prefill_chunks": 0, "decode_stall_rounds": 0}
+                      "prefill_chunks": 0, "decode_stall_rounds": 0,
+                      "multi_round_blocks": 0, "block_jit_traces": 0,
+                      "mixed_dispatches": 0, "mixed_jit_traces": 0}
         self._step = self._build_fused_step() if fused else None
         self._prefill_step = (self._build_fused_prefill_step()
                               if fused_prefill else None)
         self._chunk_step = (self._build_fused_chunk_step()
                             if fused_prefill and max_prefill_chunk is not None
                             else None)
+        self._block_step = (self._build_fused_block_step()
+                            if fused and decode_block_rounds > 1 else None)
+        self._mixed_step = (self._build_fused_mixed_step()
+                            if mixed_rounds and self._chunk_step is not None
+                            and fused else None)
         # decode tails already reserved this round (the pre-prefill
         # overlap path reserves early; _decode_round must not re-reserve)
         self._reserved_tails: set = set()
@@ -220,13 +271,22 @@ class PagedEngine:
         every round however long the arriving prompts are.  Without it,
         the prefill step drains the whole queue (monolithic batches):
         rounds where that overshoots the chunk budget while decodes
-        waited are counted in ``stats["decode_stall_rounds"]``."""
+        waited are counted in ``stats["decode_stall_rounds"]``.
+
+        Multi-round fusion hooks in here: a chunk batch coexisting with
+        decodes runs as ONE mixed dispatch (``mixed_rounds``, the tick
+        reports it already decoded), and with nothing to admit the
+        engine burns up to ``decode_block_rounds`` rounds per dispatch
+        in the persistent K-block loop — ``rounds`` advances by the
+        rounds the block actually consumed, so ``max_rounds`` keeps its
+        round-at-a-time meaning."""
         results: Dict[int, List[int]] = {}
         rounds = 0
         chunked = self.fused_prefill and self.max_prefill_chunk is not None
         while ((self.queue or self._chunk_q or self.active)
                and rounds < max_rounds):
             had_active = bool(self.active)
+            decoded = False
             if self.queue or self._chunk_q:
                 if self.active:
                     # overlap the pre-round CoW flush with prefill work:
@@ -237,7 +297,8 @@ class PagedEngine:
                     self._reserve_tails(sorted(self.active))
                     self.cache.queue.flush_overlapped(self.cache.lib.flush)
                 if chunked:
-                    prefill_toks = self._prefill_tick()
+                    prefill_toks, decoded = self._prefill_tick(
+                        allow_mixed=self._mixed_step is not None)
                 else:
                     prefill_toks = self._prefill_round()
                 if (had_active and self.max_prefill_chunk is not None
@@ -250,7 +311,14 @@ class PagedEngine:
                 # a budget of 1 is satisfied by the prefill token alone:
                 # retire those now instead of decoding a surplus token
                 self._finish_done(results)
-            self._decode_round()
+            elif self.active and self._block_step is not None:
+                # pure decode, nothing to admit: one dispatch covers up
+                # to K rounds (never past the caller's round budget)
+                rounds += self._decode_block(max_rounds - rounds)
+                self._finish_done(results)
+                continue
+            if not decoded:
+                self._decode_round()
             rounds += 1
             self._finish_done(results)
         return results
@@ -258,7 +326,9 @@ class PagedEngine:
     def _finish_done(self, results: Dict[int, List[int]]) -> None:
         for rid in list(self.active):
             r = self.active[rid]
-            if len(r.out_tokens) >= r.max_new_tokens:
+            hit_eos = (r.eos_token_id is not None and r.out_tokens
+                       and r.out_tokens[-1] == r.eos_token_id)
+            if len(r.out_tokens) >= r.max_new_tokens or hit_eos:
                 r.done = True
                 results[rid] = r.out_tokens
                 self.cache.free(rid)
@@ -332,6 +402,52 @@ class PagedEngine:
         return jax.jit(step, donate_argnums=donate,
                        static_argnames=("has_writes",))
 
+    def _build_fused_block_step(self):
+        """One jit covering up to K decode rounds (``lax.while_loop``):
+        K forwards + K masked KV scatters + K token selections, one host
+        transfer.  K is baked into the plan arrays' trailing dim, so a
+        fixed ``decode_block_rounds`` retraces only per (batch-bucket,
+        table-width) pair like the single-round step; the closure's
+        counter bump is exactly a retrace counter."""
+        eng = self
+
+        def step(params, last, steps, k_arena, v_arena, bt, lens, pages,
+                 slots, eos, seed, temps, rowmap):
+            eng.stats["block_jit_traces"] += 1
+            return _fused_block_step(
+                eng.cfg, eng.pcfg, params, last, steps, k_arena, v_arena,
+                bt, lens, pages, slots, eos, seed, temps, rowmap,
+                use_pallas=eng.use_pallas, interpret=eng.interpret)
+
+        donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def _build_fused_mixed_step(self):
+        """One jit covering a whole mixed round: chunk batch forward +
+        chunk scatter + first-token selection, THEN the decode round —
+        whose inputs for rows finishing their prompt this round come
+        straight from the chunk half (``d_from_chunk``), never touching
+        the host.  Retraces per distinct (chunk, decode) operand-shape
+        pair; counted separately so the single-path counters stay
+        comparable oracles."""
+        eng = self
+
+        def step(params, c_toks, c_lens, c_offs, k_arena, v_arena, c_bt,
+                 c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
+                 d_last, d_bt, d_lens, d_pages, d_slots, d_seed, d_temps,
+                 d_from_chunk, has_writes):
+            eng.stats["mixed_jit_traces"] += 1
+            return _fused_mixed_step(
+                eng.cfg, eng.pcfg, params, c_toks, c_lens, c_offs, k_arena,
+                v_arena, c_bt, c_plens, c_pages, c_slots, c_src, c_seed,
+                c_temps, d_last, d_bt, d_lens, d_pages, d_slots, d_seed,
+                d_temps, d_from_chunk, has_writes=has_writes,
+                use_pallas=eng.use_pallas, interpret=eng.interpret)
+
+        donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(step, donate_argnums=donate,
+                       static_argnames=("has_writes",))
+
     def _prefill_round(self) -> int:
         """Drain the request queue: one fused jitted dispatch per
         (length-bucket) prefill batch, or the eager per-request oracle
@@ -361,7 +477,7 @@ class PagedEngine:
 
     # ---------------- chunked prefill (decode-interleaved) ------------- #
 
-    def _prefill_tick(self) -> int:
+    def _prefill_tick(self, allow_mixed: bool = False):
         """One round's bounded prefill work under the chunked scheduler:
         admit newly queued requests to the chunk backlog, then dispatch
         at most ONE fused chunk batch — FIFO over the backlog, rows
@@ -369,11 +485,39 @@ class PagedEngine:
         real prompt tokens.  Unfinished prompts return to the backlog
         front (their next chunk leads the next round), so a long prompt
         streams across rounds while the decode round keeps dispatching
-        every round.  Returns the prompt tokens processed."""
+        every round.
+
+        With ``allow_mixed`` and decode rows present (active sequences,
+        or prompts finishing this very chunk), the chunk batch and the
+        round's decode fuse into ONE dispatch (``_mixed_round``).
+        Returns ``(prompt_tokens_processed, decoded)`` — ``decoded``
+        tells the caller this round's decode already ran."""
         self._admit_queue()
-        toks = 0
+        batch, sc = self._select_chunk_batch()
+        if not batch:
+            return 0, False
+        toks = sum(clen for _, clen in batch)
+        if allow_mixed:
+            fin = {st.req.req_id for st, clen in batch
+                   if st.off + clen >= len(st.req.prompt)
+                   and st.req.max_new_tokens > 1}
+            d_rids = sorted(set(self.active) | fin)
+            if d_rids:
+                unfinished = self._mixed_round(batch, sc, d_rids)
+                self._chunk_q = unfinished + self._chunk_q
+                return toks, True
+        unfinished = self._prefill_chunk_batch_fused(batch, sc)
+        self._chunk_q = unfinished + self._chunk_q
+        return toks, False
+
+    def _select_chunk_batch(self):
+        """Pick this round's chunk batch off the backlog: FIFO, one
+        chunk-length bucket, within the round's token budget; states
+        passed over (bucket mismatch, budget, unmet share dependency)
+        stay queued in order.  Returns ``(batch, sc)`` — (state, len)
+        pairs and their shared length bucket."""
         if not self._chunk_q:
-            return toks
+            return [], None
         budget = self.max_prefill_chunk
         batch: List[tuple] = []          # (_ChunkPrefill, chunk_len)
         keep: List[_ChunkPrefill] = []
@@ -393,11 +537,7 @@ class PagedEngine:
             batch.append((st, clen))
             budget -= clen
         self._chunk_q = keep
-        if not batch:
-            return toks
-        unfinished = self._prefill_chunk_batch_fused(batch, sc)
-        self._chunk_q = unfinished + self._chunk_q
-        return toks + sum(clen for _, clen in batch)
+        return batch, sc
 
     def _source_committed(self, src_id: Optional[int], n: int) -> bool:
         """Has sequence ``src_id`` committed at least ``n`` prompt
@@ -435,18 +575,14 @@ class PagedEngine:
             self._chunk_q.append(st)
             self._chunk_by_id[r.req_id] = st
 
-    def _prefill_chunk_batch_fused(self, batch: List[tuple],
-                                   sc: int) -> List[_ChunkPrefill]:
-        """One compiled dispatch for a same-bucket batch of prefill
-        chunks: length-masked chunk forward with prefix-KV flash
-        attention over each sequence's committed arena pages (gathered
-        in-scan via the block table), in-jit chunk-KV scatter against
-        the cache's per-chunk plan, in-jit token selection.  One host
-        transfer per batch, consumed only by rows whose chunk completes
-        the prompt.  Returns the still-unfinished chunk states."""
-        # the step READS the arena (prefix gather): any pending backlog
-        # must land first
-        self.cache.flush_pending()
+    def _chunk_operands(self, batch: List[tuple], sc: int) -> dict:
+        """Assemble a chunk batch's device operands + scatter plan
+        (shared by the standalone chunk dispatch and the mixed round,
+        which must plan AFTER reserving decode tails so CoW retargets
+        are seen).  Pad rows duplicate row 0; pad scatter entries
+        duplicate entry 0 (identical (page, slot, value) writes are a
+        deterministic no-op); an all-no-write batch skips the scatter
+        entirely (``has_writes=False``, its own trace)."""
         B = len(batch)
         Bp = _bucket_pow2(B)
         idx = list(range(B)) + [0] * (Bp - B)   # pad rows duplicate row 0
@@ -478,9 +614,6 @@ class PagedEngine:
             pages += p_i
             slots += s_i
             src += [i * sc + j for j in range(clen)]
-        # pad entries duplicate entry 0 (identical (page, slot, value)
-        # writes are a deterministic no-op); an all-no-write batch skips
-        # the scatter entirely (has_writes=False, its own trace)
         n_valid = len(pages)
         N = Bp * sc
         if n_valid:
@@ -491,20 +624,22 @@ class PagedEngine:
             pages = [0] * N
             slots = [0] * N
             src = [0] * N
-        self.rng_ctr += 1
-        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
-        tokens, k_arena, v_arena = self._chunk_step(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(offs), self.cache.k_arena, self.cache.v_arena,
-            bt, plens, jnp.asarray(pages, jnp.int32),
-            jnp.asarray(slots, jnp.int32), jnp.asarray(src, jnp.int32),
-            seed, jnp.asarray(temps), has_writes=n_valid > 0)
-        # chunk scatters account as the fused_prefill kind, same as the
-        # monolithic batch (PimOpQueue.launches_by_kind, trace kv_writes)
-        self.cache.commit_fused_prefill(k_arena, v_arena, pages[:n_valid],
-                                        slots[:n_valid])
-        self.stats["prefill_chunks"] += B
-        self.stats["fused_prefill_dispatches"] += 1
+        return {
+            "toks": jnp.asarray(toks), "lens": jnp.asarray(lens),
+            "offs": jnp.asarray(offs), "bt": bt, "plens": plens,
+            "pages": jnp.asarray(pages, jnp.int32),
+            "slots": jnp.asarray(slots, jnp.int32),
+            "src": jnp.asarray(src, jnp.int32),
+            "temps": jnp.asarray(temps),
+            "plan_pages": pages[:n_valid], "plan_slots": slots[:n_valid],
+            "n_valid": n_valid,
+        }
+
+    def _finish_chunks(self, batch: List[tuple],
+                       tokens) -> List[_ChunkPrefill]:
+        """Advance chunk offsets; rows whose chunk completed the prompt
+        consume their first token (one lazy host transfer per batch) and
+        join the active set.  Returns the still-unfinished states."""
         toks_np = None
         unfinished: List[_ChunkPrefill] = []
         for i, (st, clen) in enumerate(batch):
@@ -518,6 +653,115 @@ class PagedEngine:
                 del self._chunk_by_id[st.req.req_id]
             else:
                 unfinished.append(st)
+        return unfinished
+
+    def _prefill_chunk_batch_fused(self, batch: List[tuple],
+                                   sc: int) -> List[_ChunkPrefill]:
+        """One compiled dispatch for a same-bucket batch of prefill
+        chunks: length-masked chunk forward with prefix-KV flash
+        attention over each sequence's committed arena pages (gathered
+        in-scan via the block table), in-jit chunk-KV scatter against
+        the cache's per-chunk plan, in-jit token selection.  One host
+        transfer per batch, consumed only by rows whose chunk completes
+        the prompt.  Returns the still-unfinished chunk states."""
+        # the step READS the arena (prefix gather): any pending backlog
+        # must land first
+        self.cache.flush_pending()
+        c = self._chunk_operands(batch, sc)
+        self.rng_ctr += 1
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        tokens, k_arena, v_arena = self._chunk_step(
+            self.params, c["toks"], c["lens"], c["offs"],
+            self.cache.k_arena, self.cache.v_arena, c["bt"], c["plens"],
+            c["pages"], c["slots"], c["src"], seed, c["temps"],
+            has_writes=c["n_valid"] > 0)
+        # chunk scatters account as the fused_prefill kind, same as the
+        # monolithic batch (PimOpQueue.launches_by_kind, trace kv_writes)
+        self.cache.commit_fused_prefill(k_arena, v_arena, c["plan_pages"],
+                                        c["plan_slots"])
+        self.stats["prefill_chunks"] += len(batch)
+        self.stats["fused_prefill_dispatches"] += 1
+        return self._finish_chunks(batch, tokens)
+
+    def _mixed_round(self, batch: List[tuple], sc: int,
+                     d_rids: List[int]) -> List[_ChunkPrefill]:
+        """ONE compiled dispatch for a whole mixed round: the chunk
+        batch AND the decode round (which today's sequential path pays
+        two dispatches for).  The decode half covers every active
+        sequence plus every prompt finishing in this very chunk batch —
+        their first token never touches the host; ``d_from_chunk`` wires
+        it from the chunk half's selection into the decode input in-jit.
+
+        Bookkeeping: both commits run with ``kind=None`` and the round
+        is accounted as ONE ``fused_mixed`` launch; the rng counter
+        advances twice (chunk seed, then decode seed), matching the
+        sequential two-dispatch schedule, so sampled streams are
+        unchanged by the fusion.  A finishing row whose FIRST token
+        turns out to be its EOS has its decode token discarded host-side
+        (the speculative KV write beyond its committed length dies with
+        the sequence's pages — ``free`` zeroes them).  Returns the
+        still-unfinished chunk states."""
+        fin = {st.req.req_id: st.req for st, clen in batch
+               if st.off + clen >= len(st.req.prompt)}
+        reqmap = dict(self.active)
+        reqmap.update(fin)
+        # reserve every decode row's tail BEFORE planning the chunk
+        # scatter: a CoW retarget must be seen by the plan, and the
+        # coalesced copies must land before the step reads the arena
+        self._reserve_tails(d_rids)
+        self._reserved_tails.clear()
+        self.cache.flush_pending()
+        c = self._chunk_operands(batch, sc)
+        row_of = {st.req.req_id: i for i, (st, _) in enumerate(batch)}
+        B = len(d_rids)
+        Bp = _bucket_pow2(B)
+        idx = list(range(B)) + [0] * (Bp - B)   # pad rows duplicate row 0
+        seqs = [self.cache.seqs[d_rids[i]] for i in idx]
+        d_last = np.zeros((Bp,), np.int32)
+        d_from = np.full((Bp,), -1, np.int32)
+        d_temps = np.zeros((Bp,), np.float32)
+        for row, i in enumerate(idx):
+            rid = d_rids[i]
+            r = reqmap[rid]
+            d_temps[row] = r.temperature
+            if rid in fin:               # token arrives in-jit
+                d_from[row] = row_of[rid]
+            else:
+                d_last[row] = r.out_tokens[-1]
+        d_pages = np.asarray([s.pages[-1] for s in seqs], np.int32)
+        d_slots = np.asarray([s.length % self.cache.page_size
+                              for s in seqs], np.int32)
+        d_bt, d_lens = self.cache.block_table([d_rids[i] for i in idx])
+        self.rng_ctr += 1
+        c_seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        self.rng_ctr += 1
+        d_seed = self.rng_seed + jnp.uint32(self.rng_ctr)
+        c_tokens, d_tokens, k_arena, v_arena = self._mixed_step(
+            self.params, c["toks"], c["lens"], c["offs"],
+            self.cache.k_arena, self.cache.v_arena, c["bt"], c["plens"],
+            c["pages"], c["slots"], c["src"], c_seed, c["temps"],
+            jnp.asarray(d_last), d_bt, d_lens, jnp.asarray(d_pages),
+            jnp.asarray(d_slots), d_seed, jnp.asarray(d_temps),
+            jnp.asarray(d_from), has_writes=c["n_valid"] > 0)
+        self.cache.commit_fused_prefill(k_arena, v_arena, c["plan_pages"],
+                                        c["plan_slots"], kind=None)
+        self.cache.commit_fused_round(d_rids, k_arena, v_arena, kind=None)
+        # the whole round — chunk scatter included — was ONE launch
+        self.cache.queue.count_external("fused_mixed")
+        self.stats["prefill_chunks"] += len(batch)
+        self.stats["mixed_dispatches"] += 1
+        unfinished = self._finish_chunks(batch, c_tokens)
+        d_toks = np.asarray(d_tokens)[:B]
+        emitted = 0
+        for i, rid in enumerate(d_rids):
+            r = reqmap[rid]
+            if (rid in fin and r.eos_token_id is not None
+                    and r.out_tokens[-1] == r.eos_token_id):
+                continue       # first token was EOS: decode token is dead
+            r.out_tokens.append(int(d_toks[i]))
+            emitted += 1
+        self.stats["decode_rounds"] += 1
+        self.stats["tokens_out"] += emitted
         return unfinished
 
     def _prefill_batch_fused(self, reqs: List[Request], sp: int) -> None:
@@ -664,6 +908,97 @@ class PagedEngine:
         self.stats["fused_dispatches"] += 1
         return np.asarray(tokens)[:B]      # the round's one host transfer
 
+    def _decode_block(self, max_allowed: int) -> int:
+        """Up to ``decode_block_rounds`` decode rounds in ONE dispatch —
+        the persistent ``lax.while_loop`` inner loop, entered only when
+        no admissions are pending.  Returns the rounds actually consumed
+        (the longest row's emitted-token count), never more than
+        ``max_allowed``.
+
+        Host side: reserve each row's whole token block up front
+        (``reserve_tokens`` — CoW + page allocation, one coalesced
+        flush), build a (row, round) -> (page, slot) plan over the
+        reserved pages, dispatch, then read the block's ONE host
+        transfer and replay the device's stop rule (-1 sentinel = row
+        already stopped; EOS stops after its own round).  Device side:
+        the loop carries lengths/last-token/alive flags; a stopped row's
+        scatter writes its slot's current value back (structural no-op),
+        so the arena is bit-identical to a round-at-a-time run.  Plan
+        arrays are always K wide (budget-short rows clamp to their last
+        reserved slot), so a fixed K never retraces on workload
+        stragglers."""
+        rids = sorted(self.active)
+        K = self.decode_block_rounds
+        steps = [min(max_allowed, K,
+                     self.active[r].max_new_tokens
+                     - len(self.active[r].out_tokens))
+                 for r in rids]
+        if max(steps) <= 1:
+            self._decode_round()
+            return 1
+        for r, n in zip(rids, steps):
+            self.cache.reserve_tokens(self.cache.seqs[r], n)
+        self._reserved_tails.clear()
+        self.cache.flush_pending()
+        B = len(rids)
+        Bp = _bucket_pow2(B)
+        idx = list(range(B)) + [0] * (Bp - B)   # pad rows duplicate row 0
+        ps = self.cache.page_size
+        pages = np.zeros((Bp, K), np.int32)
+        slots = np.zeros((Bp, K), np.int32)
+        last = np.zeros((Bp,), np.int32)
+        steps_arr = np.zeros((Bp,), np.int32)
+        eos = np.full((Bp,), -1, np.int32)
+        temps = np.zeros((Bp,), np.float32)
+        for row, i in enumerate(idx):
+            r = rids[i]
+            req, seq, n = self.active[r], self.cache.seqs[r], steps[i]
+            for t in range(K):
+                pos = seq.length + min(t, n - 1)
+                pages[row, t] = seq.pages[pos // ps]
+                slots[row, t] = pos % ps
+            last[row] = req.out_tokens[-1]
+            steps_arr[row] = n
+            if req.eos_token_id is not None:
+                eos[row] = req.eos_token_id
+            temps[row] = req.temperature
+        # table spans the reserved pages (block_table covers the full
+        # page list); lens stay the committed lengths — the loop carries
+        # them forward round by round
+        bt, lens = self.cache.block_table([rids[i] for i in idx])
+        # K sequential rounds consume K seeds: pass round 0's, the loop
+        # derives round t's by offset — the same stream a round-at-a-time
+        # run would draw
+        self.rng_ctr += K
+        seed = self.rng_seed + jnp.uint32(self.rng_ctr - K + 1)
+        tokens, k_arena, v_arena = self._block_step(
+            self.params, jnp.asarray(last), jnp.asarray(steps_arr),
+            self.cache.k_arena, self.cache.v_arena, bt, lens,
+            jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(eos),
+            seed, jnp.asarray(temps), jnp.asarray(idx, dtype=jnp.int32))
+        toks_np = np.asarray(tokens)[:B]   # the block's ONE host transfer
+        counts = []
+        for i, r in enumerate(rids):
+            req = self.active[r]
+            n_i = 0
+            for t in range(steps[i]):
+                tok = int(toks_np[i, t])
+                if tok < 0:                # device stopped this row earlier
+                    break
+                req.out_tokens.append(tok)
+                n_i += 1
+                if (req.eos_token_id is not None
+                        and tok == req.eos_token_id):
+                    break
+            counts.append(n_i)
+        consumed = max(counts)
+        self.cache.commit_fused_block(rids, counts, k_arena, v_arena,
+                                      rounds=consumed)
+        self.stats["decode_rounds"] += consumed
+        self.stats["tokens_out"] += sum(counts)
+        self.stats["multi_round_blocks"] += 1
+        return consumed
+
     def _decode_round_eager(self, rids: List[int]) -> np.ndarray:
         """Pre-fusion baseline: Python layer loop, separate scatter."""
         last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
@@ -724,6 +1059,105 @@ def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
     tokens = _select_tokens(logits[:, 0], temps, seed,
                             use_pallas=use_pallas, interpret=interpret)
     return tokens, k_arena, v_arena
+
+
+# ---------------------------------------------------------------------- #
+# Fused multi-round decode block (persistent lax.while_loop inner loop)
+# ---------------------------------------------------------------------- #
+
+
+def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
+                      lens, pages, slots, eos, seed, temps, rowmap, *,
+                      use_pallas: bool, interpret: bool):
+    """Up to K decode rounds as ONE compiled program: a ``while_loop``
+    whose carry holds the per-row state a round-at-a-time host loop
+    would bounce through Python — current lengths, last tokens, alive
+    flags — plus the donated arenas.
+
+    Per round ``t``: forward at the carried lengths, a MASKED KV scatter
+    (dead rows re-write their slot's current value via
+    ``kv_gather_inline``, keeping the scatter a structural no-op and the
+    arena bit-identical to sequential rounds), token selection at
+    ``seed + t`` (the seed a sequential round would draw), then the stop
+    rule — a row dies when it has emitted its ``steps`` quota or its EOS
+    token.  Emitted tokens land in a (B, K) buffer, ``-1`` marking
+    rounds after a row stopped; the loop exits early once every row is
+    dead, so an all-EOS round costs no further forwards.  ``rowmap``
+    folds pad rows onto row 0's sampled draw so duplicate scatter
+    destinations always carry identical values, sampled or greedy.
+    """
+    K = pages.shape[1]
+
+    def cond(carry):
+        t, alive = carry[0], carry[1]
+        return (t < K) & jnp.any(alive)
+
+    def body(carry):
+        t, alive, lens, last, toks, k_arena, v_arena = carry
+        logits, k_new, v_new = _paged_decode_forward(
+            cfg, pcfg, params, last[:, None], k_arena, v_arena, bt, lens,
+            use_pallas=use_pallas, interpret=interpret)
+        p_t = jax.lax.dynamic_index_in_dim(pages, t, axis=1, keepdims=False)
+        s_t = jax.lax.dynamic_index_in_dim(slots, t, axis=1, keepdims=False)
+
+        def masked_scatter(arena, new):
+            old = rc_ops.kv_gather_inline(arena, p_t, s_t)
+            val = jnp.where(alive[None, :, None, None],
+                            new.astype(arena.dtype), old)
+            return rc_ops.kv_scatter_inline(arena, p_t, s_t, val,
+                                            use_pallas=use_pallas,
+                                            interpret=interpret)
+
+        k_arena = masked_scatter(k_arena, k_new[:, :, 0])
+        v_arena = masked_scatter(v_arena, v_new[:, :, 0])
+        raw = _select_tokens(logits[:, 0], temps,
+                             seed + t.astype(jnp.uint32),
+                             use_pallas=use_pallas, interpret=interpret,
+                             rowmap=rowmap)
+        toks = jax.lax.dynamic_update_slice(
+            toks, jnp.where(alive, raw, -1)[:, None], (0, t))
+        lens = lens + alive.astype(lens.dtype)
+        last = jnp.where(alive, raw, last)
+        hit_eos = alive & (eos >= 0) & (raw == eos)
+        alive = alive & ((t + 1) < steps) & ~hit_eos
+        return t + 1, alive, lens, last, toks, k_arena, v_arena
+
+    Bp = last.shape[0]
+    carry = (jnp.int32(0), steps > 0, lens, last,
+             jnp.full((Bp, K), -1, jnp.int32), k_arena, v_arena)
+    _, _, _, _, toks, k_arena, v_arena = jax.lax.while_loop(cond, body,
+                                                            carry)
+    return toks, k_arena, v_arena
+
+
+# ---------------------------------------------------------------------- #
+# Fused mixed round (one chunk batch + one decode round, one dispatch)
+# ---------------------------------------------------------------------- #
+
+
+def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
+                      v_arena, c_bt, c_plens, c_pages, c_slots, c_src,
+                      c_seed, c_temps, d_last, d_bt, d_lens, d_pages,
+                      d_slots, d_seed, d_temps, d_from_chunk, *,
+                      has_writes: bool, use_pallas: bool, interpret: bool):
+    """A whole mixed round as one compiled program: the chunk half runs
+    first (its scatter is traced before the decode forward, so a prompt
+    finishing this round decodes against its own just-written KV — the
+    data dependency that makes XLA sequence the halves correctly on
+    donated arenas), then the decode half, whose input token for rows
+    with ``d_from_chunk[j] >= 0`` comes from the chunk half's selection
+    instead of the host-supplied ``d_last``."""
+    c_tokens, k_arena, v_arena = _fused_chunk_prefill_step(
+        cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena, v_arena, c_bt,
+        c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
+        has_writes=has_writes, use_pallas=use_pallas, interpret=interpret)
+    last = jnp.where(d_from_chunk >= 0,
+                     c_tokens[jnp.clip(d_from_chunk, 0, None)], d_last)
+    d_tokens, k_arena, v_arena = _fused_decode_step(
+        cfg, pcfg, params, last[:, None], k_arena, v_arena, d_bt, d_lens,
+        d_pages, d_slots, d_seed, d_temps, use_pallas=use_pallas,
+        interpret=interpret)
+    return c_tokens, d_tokens, k_arena, v_arena
 
 
 # ---------------------------------------------------------------------- #
@@ -910,17 +1344,27 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
 
 
 def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
-                   use_pallas: bool, interpret: bool) -> jax.Array:
+                   use_pallas: bool, interpret: bool,
+                   rowmap: Optional[jax.Array] = None) -> jax.Array:
     """Per-request token choice: greedy rows take the argmax, sampled
     rows take a D-RaNGe inverse-CDF draw at their own temperature.  An
     all-greedy batch skips the TRNG + softmax entirely (lax.cond), and
-    nothing here syncs to host — callers do one transfer per round."""
+    nothing here syncs to host — callers do one transfer per round.
+
+    ``rowmap`` (the K-block loop's pad-row fold) remaps each row's
+    uniform draw to ``u[rowmap[b]]``: real rows map to themselves, pad
+    rows to row 0 — so a pad row samples the *same* token as the row it
+    duplicates and the loop's next-round scatter writes identical values
+    to identical slots (the single-round steps don't need this because
+    their scatter values never depend on the sampled token)."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def sampled(_):
         u = dr_ops.pim_random_uniform(seed, logits.shape[0], 1,
                                       use_pallas=use_pallas,
                                       interpret=interpret)[:, 0]
+        if rowmap is not None:
+            u = u[rowmap]
         t = jnp.where(temps > 0.0, temps, 1.0)
         probs = jax.nn.softmax(logits.astype(jnp.float32) / t[:, None], axis=-1)
         cum = jnp.cumsum(probs, axis=-1)

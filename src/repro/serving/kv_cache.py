@@ -219,24 +219,45 @@ class PagedKVCache:
         self.queue.enqueue_copy(src, dst)
 
     def ensure_writable_tail(self, seq: Sequence) -> None:
-        """Before appending: CoW if the tail page is shared; allocate a
-        fresh page on page-boundary crossings.
+        """Before appending one token: CoW if the tail page is shared;
+        allocate a fresh page on page-boundary crossings.
 
         CoW copies are only *enqueued* here — the engine reserves every
         active sequence's tail and then flushes once, so a decode round
         pays one batched copy launch however many sequences CoW."""
-        if seq.length % self.page_size == 0:
+        self.reserve_tokens(seq, 1)
+
+    def reserve_tokens(self, seq: Sequence, n: int) -> None:
+        """Reserve arena capacity for the sequence's next ``n`` tokens:
+        CoW the partial tail page if it is shared, then allocate enough
+        fresh pages to cover positions ``[length, length + n)``.
+
+        The engine's multi-round decode loop reserves a whole K-token
+        block up front so every in-loop scatter has a host-planned
+        (page, slot) destination with no mid-block host round-trip.
+        Reservation is idempotent (it tops up to the needed page count)
+        and never dispatches by itself — CoW copies are enqueued for the
+        caller's coalesced flush, fresh pages are zero until written.
+        A sequence that stops mid-block simply keeps its reserved tail
+        pages in ``seq.pages`` (still zero — dead rows write back the
+        value already in their slot), so the normal ``free`` path zeroes
+        and returns them with everything else: no leak, no extra
+        launch."""
+        if n <= 0:
+            return
+        if seq.length % self.page_size != 0:
+            tail = seq.pages[-1]
+            if self.refcount[tail] > 1:
+                new = self._alloc_page(near=tail)
+                self._copy_page(tail, new)
+                self.refcount[tail] -= 1
+                seq.pages[-1] = new
+                self.refcount[new] = 1
+                self.stats["cow_copies"] += 1
+        need = -(-(seq.length + n) // self.page_size)   # ceil div
+        while len(seq.pages) < need:
             seq.pages.append(self._alloc_page(
                 near=seq.pages[-1] if seq.pages else None))
-            return
-        tail = seq.pages[-1]
-        if self.refcount[tail] > 1:
-            new = self._alloc_page(near=tail)
-            self._copy_page(tail, new)
-            self.refcount[tail] -= 1
-            seq.pages[-1] = new
-            self.refcount[new] = 1
-            self.stats["cow_copies"] += 1
 
     def append_token_kv(self, seq: Sequence, k: jax.Array, v: jax.Array) -> None:
         """k, v: (layers, kvh, hd) for the token at seq.length."""
@@ -304,8 +325,13 @@ class PagedKVCache:
             self._release_page(p)
         self.flush_pending()
 
+    def _kv_tok_bytes(self) -> int:
+        return (2 * self.n_layers * self.cfg.num_kv_heads
+                * self.cfg.resolved_head_dim * np.dtype(self.dtype).itemsize)
+
     def commit_fused_round(self, seq_ids: List[int], k_arena: jax.Array,
-                           v_arena: jax.Array) -> None:
+                           v_arena: jax.Array, *,
+                           kind: Optional[str] = "fused_decode") -> None:
         """Adopt arenas mutated *inside* the engine's fused decode step
         (the round's KV scatter runs in-jit on donated buffers, so there
         is no separate ``kv_write`` flush) and advance each sequence by
@@ -313,24 +339,59 @@ class PagedKVCache:
         ``ensure_writable_tail`` before the step ran.  The single fused
         dispatch is recorded in the queue's launch counters so per-round
         dispatch accounting keeps one source of truth (and, when
-        tracing, the round's writes land in the trace)."""
+        tracing, the round's writes land in the trace).  ``kind=None``
+        skips the launch count — for the mixed chunk+decode round, whose
+        ONE dispatch covers several commits and is accounted once by the
+        engine as ``fused_mixed``."""
         self.k_arena = k_arena
         self.v_arena = v_arena
         if self.trace is not None:
             pages = [self.seqs[sid].pages[-1] for sid in seq_ids]
             slots = [self.seqs[sid].length % self.page_size
                      for sid in seq_ids]
-            tok_bytes = (2 * self.n_layers * self.cfg.num_kv_heads
-                         * self.cfg.resolved_head_dim
-                         * np.dtype(self.dtype).itemsize)
             self.trace.record_kv_write(pages, slots,
-                                       len(seq_ids) * tok_bytes)
+                                       len(seq_ids) * self._kv_tok_bytes())
         for sid in seq_ids:
             self.seqs[sid].length += 1
-        self.queue.count_external("fused_decode")
+        if kind is not None:
+            self.queue.count_external(kind)
+
+    def commit_fused_block(self, seq_ids: List[int], counts: List[int],
+                           k_arena: jax.Array, v_arena: jax.Array, *,
+                           rounds: int = 1,
+                           kind: Optional[str] = "fused_decode_block") -> None:
+        """Adopt arenas mutated inside the engine's multi-round decode
+        block (``decode_block_rounds=K``: up to K decode rounds in ONE
+        ``lax.while_loop`` dispatch) and advance each sequence by the
+        ``counts[i]`` tokens it actually emitted before its in-loop stop
+        (EOS/budget).  Capacity for the whole block must have been
+        reserved with :meth:`reserve_tokens`; positions beyond a row's
+        count hold their pre-block value (the loop's masked write-back),
+        so only the real writes land in the trace — one ``kv_write``
+        event for the whole block, stamped with the executed in-loop
+        ``rounds`` so replay can see the K-blocking the host path
+        achieved."""
+        self.k_arena = k_arena
+        self.v_arena = v_arena
+        if self.trace is not None:
+            pages: List[int] = []
+            slots: List[int] = []
+            for sid, n in zip(seq_ids, counts):
+                seq = self.seqs[sid]
+                for pos in range(seq.length, seq.length + n):
+                    pages.append(seq.pages[pos // self.page_size])
+                    slots.append(pos % self.page_size)
+            self.trace.record_kv_write(pages, slots,
+                                       len(pages) * self._kv_tok_bytes(),
+                                       rounds=rounds)
+        for sid, n in zip(seq_ids, counts):
+            self.seqs[sid].length += n
+        if kind is not None:
+            self.queue.count_external(kind)
 
     def commit_fused_prefill(self, k_arena: jax.Array, v_arena: jax.Array,
-                             pages: List[int], slots: List[int]) -> None:
+                             pages: List[int], slots: List[int], *,
+                             kind: Optional[str] = "fused_prefill") -> None:
         """Adopt arenas mutated inside the engine's fused prefill step
         (the batch's prompt-KV scatter runs in-jit on donated buffers,
         so there is no separate ``kv_write`` flush).  ``pages``/``slots``
@@ -341,16 +402,16 @@ class PagedKVCache:
         queue's launch counters under the ``fused_prefill`` kind —
         prefill KV writes show up in ``launches_by_kind`` exactly like
         decode writes — and, when tracing, the writes land in the
-        trace."""
+        trace.  ``kind=None`` skips the launch count (the mixed round's
+        chunk half; the engine accounts the one ``fused_mixed``
+        dispatch)."""
         self.k_arena = k_arena
         self.v_arena = v_arena
         if self.trace is not None and pages:
-            tok_bytes = (2 * self.n_layers * self.cfg.num_kv_heads
-                         * self.cfg.resolved_head_dim
-                         * np.dtype(self.dtype).itemsize)
             self.trace.record_kv_write(pages, slots,
-                                       len(pages) * tok_bytes)
-        self.queue.count_external("fused_prefill")
+                                       len(pages) * self._kv_tok_bytes())
+        if kind is not None:
+            self.queue.count_external(kind)
 
     def block_table(self, seq_ids: List[int],
                     max_pages: Optional[int] = None,

@@ -49,6 +49,9 @@ class TraceEvent:
     slots: Tuple[int, ...] = ()      # in-page slots (kv_write)
     value: float = 0.0               # fill value (page_init)
     nbytes: int = 0                  # payload bytes (kv_write)
+    rounds: int = 1                  # engine rounds this event spans
+                                     # (>1: a K-blocked decode loop's
+                                     # writes landed as one host commit)
 
     @property
     def n(self) -> int:
@@ -104,11 +107,16 @@ class PimTrace:
             self.events.append(TraceEvent(kind, dst=pages, slots=slots,
                                           nbytes=nbytes))
 
-    def record_kv_write(self, pages, slots, nbytes: int) -> None:
+    def record_kv_write(self, pages, slots, nbytes: int, *,
+                        rounds: int = 1) -> None:
         """Explicit hook for writes that bypass the queue (the fused
-        decode round's in-jit scatter)."""
+        decode round's in-jit scatter).  ``rounds > 1`` stamps a
+        K-blocked decode loop's whole block — replay still sees one
+        ``kv_write`` batch (the coalescing the engine actually
+        achieved), and analyses can recover rounds-per-host-commit."""
         self.events.append(TraceEvent("kv_write", dst=tuple(pages),
-                                      slots=tuple(slots), nbytes=int(nbytes)))
+                                      slots=tuple(slots), nbytes=int(nbytes),
+                                      rounds=int(rounds)))
 
 
 # ---------------------------------------------------------------------- #

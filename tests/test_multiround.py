@@ -1,0 +1,203 @@
+"""Round-equivalence harness for the multi-round engine loop.
+
+The multi-round features (mixed chunk+decode rounds, the K-blocked
+``lax.while_loop`` decode) change WHEN work is dispatched, never WHAT is
+computed: token streams must stay bit-identical to the round-at-a-time
+oracles, per-sequence arena contents must match round for round, and a
+stopped sequence must neither emit post-stop tokens nor leak pages.
+Property-based sweeps run through ``hypothesis`` when installed, else
+the ``_compat`` fixed-example fallback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _compat import given, settings, st
+
+from repro.configs import ARCHS, ParallelConfig, reduced
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import PagedEngine, Request
+
+PCFG = ParallelConfig(attention_impl="naive", remat="none")
+KS = (1, 3, 8)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=1)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, *, K=1, fused=True, chunk=None):
+    return PagedEngine(cfg, params, pcfg=PCFG, page_size=4, num_pages=128,
+                       fused=fused, fused_prefill=fused,
+                       max_prefill_chunk=chunk,
+                       decode_block_rounds=K if fused else 1)
+
+
+def _submit(eng, cfg, seed, n_reqs, budget, eos_map=None):
+    rng = np.random.default_rng(seed)
+    for i in range(n_reqs):
+        plen = int(rng.integers(2, 12))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        eng.submit(Request(i, prompt, max_new_tokens=budget,
+                           temperature=0.0,
+                           eos_token_id=(eos_map or {}).get(i)))
+
+
+def _first_occurrence_eos(stream, pos):
+    """Walk ``pos`` down to 0 until the token there has no earlier
+    occurrence — every engine stops at an EOS token's FIRST emission,
+    so only such positions give a well-defined expected stream."""
+    for p in range(pos, -1, -1):
+        if stream.index(stream[p]) == p:
+            return stream[p], p
+    return stream[0], 0
+
+
+def _seq_kv(eng, rid):
+    """Per-sequence committed KV, gathered page by page: page
+    *assignment* legitimately differs across K (block reservation
+    changes allocator order), page *contents* must not."""
+    seq = eng.cache.seqs[rid]
+    out = []
+    for arena in (eng.cache.k_arena, eng.cache.v_arena):
+        g = jnp.asarray(arena[:, np.asarray(seq.pages)], jnp.float32)
+        L = g.shape[0]
+        out.append(np.asarray(g.reshape(L, -1, *g.shape[3:])[:, :seq.length]))
+    return out
+
+
+class TestRoundEquivalence:
+    """Token streams are bit-identical across eager / single-round-fused
+    / K-round-fused engines, EOS and budgets included."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(n_reqs=st.integers(1, 3), seed=st.integers(0, 10_000),
+           budget=st.integers(3, 10), use_eos=st.booleans(),
+           chunk=st.sampled_from([None, 4]))
+    def test_fuzz_streams_identical(self, model, n_reqs, seed, budget,
+                                    use_eos, chunk):
+        cfg, params = model
+        ref_eng = _engine(cfg, params, K=1)
+        _submit(ref_eng, cfg, seed, n_reqs, budget)
+        ref = ref_eng.run()
+        eos_map, expect = None, ref
+        if use_eos:
+            rng = np.random.default_rng(seed + 1)
+            eos_map, expect = {}, {}
+            for i, stream in ref.items():
+                pos = int(rng.integers(0, len(stream)))
+                eos_map[i], cut = _first_occurrence_eos(stream, pos)
+                expect[i] = stream[:cut + 1]
+        runs = [("eager", _engine(cfg, params, fused=False))]
+        runs += [(f"K{k}", _engine(cfg, params, K=k, chunk=chunk))
+                 for k in KS]
+        for name, eng in runs:
+            _submit(eng, cfg, seed, n_reqs, budget, eos_map=eos_map)
+            got = eng.run()
+            assert got == expect, (name, got, expect)
+            assert eng.cache.pages_in_use == 0, name
+
+    def test_arena_parity_mid_flight(self, model):
+        """Stop every engine after the SAME number of rounds mid-stream:
+        token counts, sequence lengths, and per-sequence arena KV must
+        line up round for round — K-variants bit-identical (the masked
+        write-back keeps dead-row scatters structural no-ops), fused vs
+        eager at bf16 resolution."""
+        cfg, params = model
+        states = {}
+        for name, eng in [("eager", _engine(cfg, params, fused=False))] + [
+                (f"K{k}", _engine(cfg, params, K=k)) for k in KS]:
+            _submit(eng, cfg, seed=7, n_reqs=2, budget=32)
+            eng.run(max_rounds=7)
+            assert sorted(eng.active) == [0, 1], name
+            states[name] = (
+                {r: list(eng.active[r].out_tokens) for r in eng.active},
+                {r: eng.cache.seqs[r].length for r in eng.active},
+                {r: _seq_kv(eng, r) for r in eng.active})
+        toks1, lens1, kv1 = states["K1"]
+        for k in (3, 8):
+            toksk, lensk, kvk = states[f"K{k}"]
+            assert toksk == toks1 and lensk == lens1
+            for r in kv1:
+                for a, b in zip(kv1[r], kvk[r]):
+                    np.testing.assert_array_equal(a, b)
+        tokse, lense, kve = states["eager"]
+        assert tokse == toks1 and lense == lens1
+        for r in kv1:
+            for a, b in zip(kv1[r], kve[r]):
+                np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+class TestStopDetection:
+    """In-loop stop edge cases: no post-stop tokens, no leaked pages."""
+
+    def _streams(self, model, **kw):
+        cfg, params = model
+        eng = _engine(cfg, params, **{k: v for k, v in kw.items()
+                                      if k in ("K", "fused", "chunk")})
+        _submit(eng, cfg, kw.get("seed", 0), kw.get("n_reqs", 1),
+                kw.get("budget", 12), eos_map=kw.get("eos_map"))
+        res = eng.run()
+        return res, eng
+
+    def test_eos_on_first_token_of_block(self, model):
+        """EOS landing on a K-block's FIRST in-loop round: the loop must
+        stop the row there (no K-1 ghost tokens) and the host must not
+        replay past it."""
+        ref, _ = self._streams(model, K=1, budget=16)
+        # round 1 = prefill + single decode; the K-block starts at
+        # stream position 2 — force EOS exactly there
+        eos, cut = _first_occurrence_eos(ref[0], 2)
+        got, eng = self._streams(model, K=8, budget=16, eos_map={0: eos})
+        assert got[0] == ref[0][:cut + 1]
+        # nothing post-stop: decode emitted exactly the stream minus the
+        # prefill's first token
+        assert eng.stats["tokens_out"] == len(got[0]) - 1
+        assert eng.cache.pages_in_use == 0
+
+    def test_all_rows_stop_same_round(self, model):
+        """Every sequence exhausting its budget in the same in-loop
+        round: the while_loop exits early, counts stay exact."""
+        ref, _ = self._streams(model, K=1, n_reqs=3, budget=6)
+        got, eng = self._streams(model, K=8, n_reqs=3, budget=6)
+        assert got == ref
+        assert all(len(v) == 6 for v in got.values())
+        assert eng.stats["multi_round_blocks"] >= 1
+        assert eng.cache.pages_in_use == 0
+
+    def test_budget_exhaustion_mid_block(self, model):
+        """A token budget that is not a multiple of K dies mid-block;
+        the consumed-rounds accounting must match the tokens emitted."""
+        ref, _ = self._streams(model, K=1, budget=11)
+        got, eng = self._streams(model, K=8, budget=11)
+        assert got == ref and len(got[0]) == 11
+        assert eng.stats["decode_rounds"] == eng.stats["tokens_out"]
+        assert eng.cache.pages_in_use == 0
+
+    def test_admission_between_blocks(self, model):
+        """A request arriving between K-blocks: the engine drops back to
+        admission rounds, the newcomer prefills, and both streams stay
+        identical across K (same mid-run submission schedule)."""
+        cfg, params = model
+        streams = {}
+        for k in KS:
+            eng = _engine(cfg, params, K=k)
+            _submit(eng, cfg, seed=3, n_reqs=1, budget=24)
+            eng.run(max_rounds=9)       # past at least one K-block
+            rng = np.random.default_rng(99)
+            eng.submit(Request(1, rng.integers(0, cfg.vocab_size, 6)
+                               .astype(np.int32), max_new_tokens=8,
+                               temperature=0.0))
+            res = eng.run()
+            assert eng.cache.pages_in_use == 0
+            streams[k] = res
+        assert streams[1] == streams[3] == streams[8]
+        assert len(streams[1][0]) == 24 and len(streams[1][1]) == 8

@@ -250,6 +250,57 @@ class TestDispatchCounts:
             assert eng.cache.queue.stats["launches"] - base == 3
             assert eng.stats["prefill_chunks"] == 3
 
+    def test_k_block_decode_under_one_dispatch_per_token(self, rng):
+        """Dispatches-per-token regression for the persistent decode
+        loop: after warmup, a 32-round pure-decode workload at K=8 folds
+        every 8 rounds into ONE ``fused_decode_block`` launch — 4
+        dispatches for 64 tokens, well under 1 per token."""
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=128,
+                          decode_block_rounds=8)
+        nreqs = 2
+        for i in range(nreqs):
+            prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new_tokens=64,
+                               temperature=0.0))
+        eng.run(max_rounds=9)           # warmup: prefill + first block
+        assert len(eng.active) == nreqs
+        before = eng.cache.queue.snapshot()
+        base_tokens = eng.stats["tokens_out"]
+        eng.run(max_rounds=32)          # pure decode, nothing queued
+        delta = eng.cache.queue.delta(before)
+        tokens = eng.stats["tokens_out"] - base_tokens
+        assert delta == {"fused_decode_block": 4}, delta
+        assert tokens == 32 * nreqs
+        dispatches_per_token = sum(delta.values()) / tokens
+        assert dispatches_per_token < 1.0
+        assert eng.stats["multi_round_blocks"] >= 5
+
+    def test_mixed_round_is_exactly_one_dispatch(self, rng):
+        """A round running a chunk batch AND the decode round costs
+        exactly ONE launch (the ``fused_mixed`` kind) — and the chunked
+        scheduler keeps ``decode_stall_rounds`` at 0 throughout."""
+        cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                          max_prefill_chunk=8)
+        prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+        eng.submit(Request(0, prompt, max_new_tokens=32, temperature=0.0))
+        eng.run(max_rounds=2)           # request 0 is now mid-decode
+        assert sorted(eng.active) == [0]
+        # a long prompt arrives: its chunk rides the decode dispatch
+        long_prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+        eng.submit(Request(1, long_prompt, max_new_tokens=4,
+                           temperature=0.0))
+        before = eng.cache.queue.snapshot()
+        base_mixed = eng.stats["mixed_dispatches"]
+        eng.run(max_rounds=1)
+        delta = eng.cache.queue.delta(before)
+        assert delta == {"fused_mixed": 1}, delta
+        assert eng.stats["mixed_dispatches"] == base_mixed + 1
+        assert eng.stats["decode_stall_rounds"] == 0
+
 
 class TestFusedDecode:
     """The fused single-dispatch decode round: jitted scan-over-layers
