@@ -29,6 +29,15 @@ to the TPU framework), three tables:
    Dispatch counts come from ``PimOpQueue.snapshot()``/``delta()`` —
    the same source of truth the regression tests pin.
 
+6. Tensor-parallel sharded serving: mesh {1, 2, 4} × logit collective
+   {psum, psum_compressed} → decode tokens/s, batch TTFT, dispatches
+   per round (still ONE — the shard_map program spans all shards), and
+   the per-shard ``launches_by_owner`` breakdown.  mesh=1 runs
+   in-process; mesh>1 cells run in a subprocess with
+   ``--xla_force_host_platform_device_count`` and are recorded as
+   skipped on boxes under 4 cores (XLA host collectives spin-wait and
+   deadlock there).
+
 Metrics print as ``name,us_per_call,derived`` CSV and the fusion numbers
 are also written to ``BENCH_serving.json`` so CI tracks them per PR.
 Pass ``--smoke`` for the CI-sized configuration.
@@ -38,13 +47,16 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import textwrap
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.serving.engine import PagedEngine, Request
@@ -263,6 +275,102 @@ def _mixed_long_prompt(cfg, params, rng, *, chunk, n_decode, decode_new,
     }
 
 
+def _mesh_row_local(world: int, compressed: bool, smoke: bool) -> dict:
+    """Measure one (mesh, collective) cell IN THIS PROCESS — requires
+    ``jax.device_count() >= world``.  Same shape as table 2: warmup
+    batch pays the traces, then a timed batch gives batch TTFT (the
+    prefill round), a two-round dispatch probe, and decode tokens/s.
+    The per-shard attribution comes straight from
+    ``PimOpQueue.snapshot(by_owner=True)`` over the timed window."""
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    mesh = make_local_mesh(model=world)
+    n_reqs, new_tokens = (2, 8) if smoke else (4, 16)
+    eng = PagedEngine(cfg, params, page_size=4, num_pages=256, mesh=mesh,
+                      compressed_collectives=compressed)
+    prompts = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(n_reqs)]
+    # two warmup batches: the first pays the jit traces, the second pays
+    # the one-time XLA relowering for the post-round arena shardings
+    # (sharded arrays returned by the fused step key the executable
+    # cache differently from the freshly device_put arenas — no Python
+    # retrace, but one extra compile on the first post-warmup round)
+    for rep in range(2):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rep * n_reqs + i, p,
+                               max_new_tokens=new_tokens, temperature=0.0))
+        eng._prefill_round()
+        eng.run()
+    for i, p in enumerate(prompts):                       # timed batch
+        eng.submit(Request(2 * n_reqs + i, p, max_new_tokens=new_tokens,
+                           temperature=0.0))
+    owner_base = eng.cache.queue.snapshot(by_owner=True)
+    t0 = time.perf_counter()
+    eng._prefill_round()
+    ttft = time.perf_counter() - t0
+    probe_rounds = 2
+    base_launch = eng.cache.queue.stats["launches"]
+    for _ in range(probe_rounds):
+        eng._decode_round()
+    dispatches = (eng.cache.queue.stats["launches"]
+                  - base_launch) / probe_rounds
+    base_tok = eng.stats["tokens_out"]
+    t0 = time.perf_counter()
+    eng.run()                                             # decode to done
+    dt = time.perf_counter() - t0
+    decoded = eng.stats["tokens_out"] - base_tok
+    return {
+        "mesh": world,
+        "collective": "psum_compressed" if compressed else "psum",
+        "decode_tok_s": round(decoded / dt if dt > 0 else float("inf"), 2),
+        "ttft_ms": round(ttft * 1e3, 3),
+        "dispatches_per_round": dispatches,
+        "launches_by_owner": eng.cache.queue.delta(owner_base,
+                                                   by_owner=True),
+    }
+
+
+def _mesh_table(smoke: bool) -> dict:
+    """Table 6 sweep.  mesh=1 in-process; mesh>1 needs N host devices,
+    which only exist under ``--xla_force_host_platform_device_count``
+    set before jax imports — so those cells run in a subprocess that
+    imports this module and calls :func:`_mesh_row_local`."""
+    rows: dict = {}
+    src = os.path.join(_ROOT, "src")
+    for world in (1, 2, 4):
+        for compressed in (False, True):
+            key = f"mesh{world}_" + ("psum_compressed" if compressed
+                                     else "psum")
+            if world == 1:
+                rows[key] = _mesh_row_local(1, compressed, smoke)
+            elif (os.cpu_count() or 1) < 4:
+                rows[key] = {"skipped":
+                             "host-mesh collectives need >=4 cores"}
+            else:
+                prog = textwrap.dedent(f"""
+                    import os, sys, json
+                    os.environ["XLA_FLAGS"] = (
+                        "--xla_force_host_platform_device_count={world}")
+                    sys.path.insert(0, {os.path.dirname(os.path.abspath(__file__))!r})
+                    import serving_e2e
+                    row = serving_e2e._mesh_row_local(
+                        {world}, {compressed}, {smoke})
+                    print("ROW=" + json.dumps(row))
+                """)
+                env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu")
+                res = subprocess.run([sys.executable, "-c", prog], env=env,
+                                     capture_output=True, text=True,
+                                     timeout=900)
+                if res.returncode != 0:
+                    rows[key] = {"error": (res.stderr or res.stdout)[-500:]}
+                    continue
+                line = [ln for ln in res.stdout.splitlines()
+                        if ln.startswith("ROW=")][-1]
+                rows[key] = json.loads(line[len("ROW="):])
+    return rows
+
+
 def main(out=sys.stdout, smoke: bool = False):
     print("name,us_per_call,derived", file=out)
     cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
@@ -365,6 +473,19 @@ def main(out=sys.stdout, smoke: bool = False):
                  / max(bstats["K8"]["dispatches_per_token"], 1e-9))
     print(f"decode_block_dispatch_reduction,0,{blk_ratio:.2f}x", file=out)
 
+    # ---- table 6: tensor-parallel mesh x logit-collective sweep -------- #
+    mrows = _mesh_table(smoke)
+    for key, row in mrows.items():
+        if "decode_tok_s" in row:
+            print(f"sharded_{key},{1e6/max(row['decode_tok_s'],1e-9):.0f},"
+                  f"tok_s={row['decode_tok_s']:.1f}"
+                  f";ttft_ms={row['ttft_ms']:.1f}"
+                  f";dispatches_per_round={row['dispatches_per_round']:.1f}",
+                  file=out)
+        else:
+            note = row.get("skipped", row.get("error", ""))
+            print(f"sharded_{key},0,skipped={note}", file=out)
+
     bench = {
         "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec,
                    "prefill": pre},
@@ -398,6 +519,9 @@ def main(out=sys.stdout, smoke: bool = False):
         "block_decode_config": {k: v for k, v in blk.items() if k != "ks"},
         "block_decode_sweep": bstats,
         "block_decode_dispatch_reduction": round(blk_ratio, 2),
+        # table 6: tensor-parallel mesh x collective sweep (mesh>1 cells
+        # record a skip note on hosts below 4 cores)
+        "mesh_sweep": mrows,
     }
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     with open(path, "w") as f:

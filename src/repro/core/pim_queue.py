@@ -73,11 +73,20 @@ class PimOpQueue:
             "overlap_flushes": 0,     # backlogs dispatched early to overlap
         }
         self.launches_by_kind: Dict[str, int] = {}
+        # per-owner attribution: owner tag -> {kind: launches}.  A launch
+        # that spans shards (one SPMD dispatch over N per-shard buffers)
+        # counts ONCE in launches/launches_by_kind and once per
+        # participating owner here — the global counters stay the
+        # dispatch-regression source of truth, the breakdown answers
+        # "which arena/shard did that dispatch serve?".
+        self.launches_by_owner: Dict[str, Dict[str, int]] = {}
+        self._pending_owner: Dict[str, Set[str]] = {}
         # optional PimTrace sink (duck-typed: record_from_queue(kind, ops))
         self.trace = None
-        # at most one lib drives a queue: pending ops carry no owner, so
-        # two libs flushing one queue would land each other's ops on the
-        # wrong arenas (TpuLib claims this at construction)
+        # at most one lib drives a queue: owner tags are accounting
+        # metadata, not routing — two libs flushing one queue would
+        # still land each other's ops on the wrong arenas (TpuLib
+        # claims this at construction)
         self.owner = None
         # hazard tracking for deferred clients (see admit())
         self._hazard_rows: Set[int] = set()
@@ -90,6 +99,7 @@ class PimOpQueue:
     def register_kind(self, kind: str, fn: FlushFn) -> None:
         self._kinds[kind] = fn
         self._pending.setdefault(kind, [])
+        self._pending_owner.setdefault(kind, set())
         self.launches_by_kind.setdefault(kind, 0)
 
     def has_kind(self, kind: str) -> bool:
@@ -97,10 +107,17 @@ class PimOpQueue:
 
     # -- enqueue -------------------------------------------------------- #
 
-    def enqueue(self, kind: str, op, n_ops: int = 1) -> None:
+    def enqueue(self, kind: str, op, n_ops: int = 1,
+                owner: Optional[str] = None) -> None:
+        """Collect one op record.  ``owner`` optionally tags the op with
+        the lib/arena it belongs to; flush attributes the kind's launch
+        to every distinct owner seen (falling back to the owning lib's
+        :meth:`owner_tags`/``tag`` when ops carry no tag)."""
         if kind not in self._kinds:
             raise KeyError(f"unknown PiM op kind {kind!r}")
         self._pending[kind].append(op)
+        if owner is not None:
+            self._pending_owner[kind].add(owner)
         self.stats["ops_enqueued"] += n_ops
 
     def enqueue_copy(self, src_page: int, dst_page: int) -> None:
@@ -164,30 +181,69 @@ class PimOpQueue:
     def pending_ops(self) -> int:
         return sum(len(v) for v in self._pending.values())
 
-    def _count_launch(self, kind: str, n: int = 1) -> None:
+    def _default_owners(self) -> Tuple[str, ...]:
+        """Owner tags to attribute a launch to when its ops carried
+        none: the owning lib's per-shard tags, its plain tag, or
+        nothing (ownerless queues keep only the global counters)."""
+        tags = getattr(self.owner, "owner_tags", None)
+        if callable(tags):
+            return tuple(tags())
+        tag = getattr(self.owner, "tag", None)
+        return (str(tag),) if tag else ()
+
+    def _count_launch(self, kind: str, n: int = 1,
+                      owners: Optional[Iterable[str]] = None) -> None:
         self.stats["launches"] += n
         self.launches_by_kind[kind] += n
+        if owners is None:
+            owners = self._pending_owner.get(kind) or self._default_owners()
+        for o in sorted(owners):
+            per = self.launches_by_owner.setdefault(o, {})
+            per[kind] = per.get(kind, 0) + n
 
-    def count_external(self, kind: str, n: int = 1) -> None:
+    def count_external(self, kind: str, n: int = 1,
+                       owner=None) -> None:
         """Account kernel dispatches issued outside the queue (e.g. the
         engine's fused decode step, or the fused prefill batch's in-jit
         KV scatter) so launch counters stay the single source of truth
-        for per-round dispatch regressions."""
+        for per-round dispatch regressions.  ``owner`` (a tag or an
+        iterable of tags) attributes the dispatch in the per-owner
+        breakdown; by default it lands on the owning lib's tags — for a
+        sharded lib that is every shard the SPMD dispatch spanned."""
         self.launches_by_kind.setdefault(kind, 0)
-        self._count_launch(kind, n)
+        if owner is None:
+            owners = None
+        elif isinstance(owner, str):
+            owners = (owner,)
+        else:
+            owners = tuple(owner)
+        self._count_launch(kind, n, owners=owners)
 
-    def snapshot(self) -> Dict[str, int]:
+    def snapshot(self, by_owner: bool = False) -> Dict:
         """Point-in-time copy of ``launches_by_kind`` for delta-based
         dispatch accounting: take one before a window of engine rounds,
         diff with :meth:`delta` after, and you have exactly the
         dispatches that window cost — the dispatches-per-token
         regression tests and the K-sweep benchmark both measure this
-        way instead of trusting engine-side mirrors."""
+        way instead of trusting engine-side mirrors.  With
+        ``by_owner=True`` the copy is the nested per-owner breakdown
+        (``{owner: {kind: n}}``) instead."""
+        if by_owner:
+            return {o: dict(k) for o, k in self.launches_by_owner.items()}
         return dict(self.launches_by_kind)
 
-    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
-        """Per-kind launches since ``before`` (a :meth:`snapshot`),
-        zero-count kinds omitted."""
+    def delta(self, before: Dict, by_owner: bool = False) -> Dict:
+        """Per-kind launches since ``before`` (a :meth:`snapshot` taken
+        with the same ``by_owner``), zero-count kinds/owners omitted."""
+        if by_owner:
+            out: Dict[str, Dict[str, int]] = {}
+            for o, kinds in self.launches_by_owner.items():
+                prev = before.get(o, {})
+                d = {k: v - prev.get(k, 0) for k, v in kinds.items()
+                     if v - prev.get(k, 0)}
+                if d:
+                    out[o] = d
+            return out
         return {k: v - before.get(k, 0)
                 for k, v in self.launches_by_kind.items()
                 if v - before.get(k, 0)}
@@ -231,6 +287,7 @@ class PimOpQueue:
             if self.trace is not None:
                 self.trace.record_from_queue(kind, ops)
             arenas = self._kinds[kind](self, arenas, ops)
+            self._pending_owner[kind] = set()
             # logical ops, matching ops_enqueued (a KVWriteBatch record
             # carries .n token writes)
             self.stats["ops_coalesced"] += sum(getattr(o, "n", 1) for o in ops)

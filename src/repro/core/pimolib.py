@@ -379,6 +379,19 @@ class TpuLib(PimLib):
     buffer, pages on axis 0) or a list of layered ``(L, P, ...)``
     buffers (the serving KV cache's (k, v) pair, pages on axis 1) — the
     queue flushes all bound buffers together.
+
+    **Sharded arenas.**  When the serving engine runs over a device
+    mesh, the arenas it binds are single *global* jax.Arrays laid out
+    with a :class:`jax.sharding.NamedSharding` that splits one axis
+    (the KV-head axis) across the mesh's ``model`` dimension — each
+    device holds its head slice of every page.  The lib stays ONE lib
+    behind ONE queue: flushes run on the global arrays (XLA partitions
+    the coalesced launch across shards), so ``launches_by_kind`` still
+    counts each coalesced flush once for the whole mesh.  ``shard_axis``
+    / ``mesh`` record the layout; :meth:`owner_tags` names the per-shard
+    owners (``tag/shard0`` …) that the queue's per-owner breakdown
+    attributes launches to, and :meth:`shard_views` exposes each
+    device's addressable slice for parity tests.
     """
 
     face = op_registry.FACE_JAX
@@ -388,12 +401,18 @@ class TpuLib(PimLib):
                  layered: Optional[bool] = None,
                  allocator: Optional[SubarrayAllocator] = None,
                  use_pallas: bool = False, deferred: bool = False,
-                 queue: Optional[PimOpQueue] = None) -> None:
+                 queue: Optional[PimOpQueue] = None,
+                 tag: str = "lib", shard_axis: Optional[int] = None,
+                 mesh=None, axis_name: str = "model") -> None:
         if arena is not None and buffers is not None:
             raise ValueError("pass either arena= or buffers=, not both")
         self.arena = arena
         self.use_pallas = use_pallas
         self.deferred = deferred
+        self.tag = tag
+        self.shard_axis = shard_axis
+        self.mesh = mesh
+        self.axis_name = axis_name
         self.queue = queue if queue is not None else PimOpQueue(
             use_pallas=use_pallas)
         if self.queue.owner is not None:
@@ -417,12 +436,17 @@ class TpuLib(PimLib):
 
     def adopt_buffers(self, buffers: Sequence[jax.Array], *,
                       layered: bool = True,
-                      allocator: Optional[SubarrayAllocator] = None) -> None:
+                      allocator: Optional[SubarrayAllocator] = None,
+                      shard_axis: Optional[int] = None,
+                      mesh=None, axis_name: str = "model") -> None:
         """Bind the arena buffers this face flushes against — how the
         paged KV cache plugs its (k, v) pair into a caller-supplied lib.
         A lib already bound to arenas refuses to rebind: the first
         owner's page ids would silently flush against the new buffers
-        (share a queue across libs for joint accounting instead)."""
+        (share a queue across libs for joint accounting instead).
+        ``shard_axis``/``mesh`` record that the buffers are global
+        arrays split on that axis over ``mesh``'s ``axis_name``
+        dimension (see the class docstring)."""
         if self.queue.pending_ops:
             raise RuntimeError("cannot adopt buffers with pending ops")
         if self.buffers or self.arena is not None:
@@ -431,8 +455,43 @@ class TpuLib(PimLib):
                 "arena owner (clients share the lib for joint accounting)")
         self._set_buffers(buffers)
         self.layered = layered
+        if shard_axis is not None:
+            self.shard_axis = shard_axis
+            self.mesh = mesh
+            self.axis_name = axis_name
         if allocator is not None:
             self.allocator = allocator
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh extent of the shard axis (1 for a host-local lib)."""
+        if self.shard_axis is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[self.axis_name]
+
+    def owner_tags(self) -> Tuple[str, ...]:
+        """Owner tags for the queue's per-owner launch attribution: one
+        tag per shard for a sharded lib (every shard participates in
+        each SPMD dispatch), else the lib's own tag."""
+        n = self.n_shards
+        if n == 1:
+            return (self.tag,)
+        return tuple(f"{self.tag}/shard{i}" for i in range(n))
+
+    def shard_views(self, buffer: int = 0) -> List[np.ndarray]:
+        """Each shard's slice of ``buffers[buffer]`` as numpy arrays,
+        ordered by position along the shard axis (shard 0 = heads
+        [0, H/N), …).  Host-local libs return the whole buffer as one
+        view.  Flushes pending work first so views reflect committed
+        state — the sharded-parity tests compare these against the
+        host-local engine's head slices."""
+        self.flush()
+        buf = self.buffers[buffer]
+        if self.shard_axis is None or self.n_shards == 1:
+            return [np.asarray(buf)]
+        shards = sorted(buf.addressable_shards,
+                        key=lambda s: s.index[self.shard_axis].start or 0)
+        return [np.asarray(s.data) for s in shards]
 
     def _set_buffers(self, buffers: Sequence[jax.Array]) -> None:
         """The ONE place buffer state changes: keeps a wrapping TpuArena

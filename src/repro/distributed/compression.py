@@ -43,7 +43,14 @@ def _quantize(x: jax.Array):
     pad = (-n) % BLOCK
     xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
     xb = xp.reshape(*x.shape[:-1], -1, BLOCK)
-    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
+    # all-zero blocks (e.g. the padding psum_compressed appends to reach
+    # world*seg elements) must dequantize to EXACT zeros: a tiny additive
+    # scale floor would keep codes at 0 here, but any future change that
+    # divides by absmax directly would turn pads into NaN/garbage that the
+    # all_to_all round trip then sums into real elements.  Guard with a
+    # where(): zero blocks get scale 1.0 -> codes 0 -> dequantized 0.0.
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
     codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
     return codes, scale.astype(jnp.float32)
 

@@ -118,22 +118,49 @@ Multi-round fusion (the "one dispatch per N rounds" step).  Two layers:
   ``fused_decode_block`` kind, so dispatches-per-token falls below 1
   after warmup.  ``decode_block_rounds=1`` (default) and the eager path
   are kept as round-at-a-time oracles.
+
+Tensor-parallel sharded serving (``mesh=``): pass a mesh with a
+``model`` axis and every fused step runs as a ``shard_map`` program
+spanning all N devices — still ONE dispatch per round.  Layer params
+shard Megatron-style over their logical axes (``heads`` / ``kv_heads``
+/ ``ff`` / ``vocab`` -> ``model``; the spec tree comes from
+``models.params.param_specs`` under a ``sharding_env``), the KV arenas
+split on the KV-head axis (each device holds its head slice of every
+page — page ids, block tables, and the op queue stay mesh-wide), and
+block tables / lengths / sampling state are replicated.  Inside the
+program: vocab-parallel embedding and logits (masked local lookup /
+local partial logits placed at ``axis_index * V_local``, both reduced
+with an exact-zeros ``psum`` — bit-identical to host-local math),
+row-parallel attention-out and MLP-down ``psum``s (the only float
+reordering vs host-local), and the final logit reduce routed through
+``distributed.compression.psum_compressed`` when
+``compressed_collectives=True`` (int8 wire traffic, logits within
+quantization tolerance).  Token selection runs replicated from the full
+logits, so every shard picks the same token and the round's single
+host transfer is unchanged.  CPU dev boxes get a real multi-device
+mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.compression import _axis_size, psum_compressed
+from repro.distributed.sharding import sharding_env
 from repro.kernels.drange import ops as dr_ops
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.paged_attention import ops as pa_ops
 from repro.kernels.rowclone import ops as rc_ops
+from repro.models import params as P_mod
 from repro.models import transformer as T
 from repro.models.layers import (rmsnorm, cast, logits_out, embed, mlp,
                                  apply_rope, rope_sincos)
@@ -193,17 +220,52 @@ class PagedEngine:
                  fused_prefill: bool = True,
                  max_prefill_chunk: Optional[int] = None,
                  decode_block_rounds: int = 1, mixed_rounds: bool = True,
-                 lib=None, record_trace: bool = False):
+                 lib=None, record_trace: bool = False,
+                 mesh=None, compressed_collectives: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
-        self.params = params
         self.pcfg = pcfg or ParallelConfig(attention_impl="naive", remat="none")
+        # tensor-parallel sharded serving: fused steps become shard_map
+        # programs over the mesh's `model` axis (see module docstring)
+        self.mesh = mesh
+        self.compressed_collectives = compressed_collectives
+        if compressed_collectives and mesh is None:
+            raise ValueError("compressed_collectives requires mesh=")
+        self._param_specs = None
+        self._arena_spec = None
+        if mesh is not None:
+            if "model" not in dict(mesh.shape):
+                raise ValueError("engine mesh needs a 'model' axis")
+            n = mesh.shape["model"]
+            if n > 1:
+                bad = {name: dim for name, dim in
+                       (("num_heads", cfg.num_heads),
+                        ("num_kv_heads", cfg.num_kv_heads),
+                        ("d_ff", cfg.d_ff),
+                        ("vocab_size", cfg.vocab_size))
+                       if dim % n != 0}
+                if bad:
+                    # resolve_spec would silently replicate a non-divisible
+                    # dim, and the steps' unconditional psums would then
+                    # over-count that path by N — refuse instead
+                    raise ValueError(
+                        f"model dims {bad} not divisible by mesh model "
+                        f"axis {n}")
+            with sharding_env(mesh, fsdp=False):
+                self._param_specs = P_mod.param_specs(T.model_defs(cfg))
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._param_specs,
+                is_leaf=lambda s: isinstance(s, P))
+            params = jax.device_put(params, shardings)
+            self._arena_spec = P(None, None, None, "model", None)
+        self.params = params
         # lib: caller-supplied JAX-face PimLib (pimolib v2) the cache
         # binds its arenas to — shares the op queue / launch accounting;
         # record_trace: keep a PimTrace for model-face replay
         self.cache = PagedKVCache(cfg, num_pages=num_pages,
                                   page_size=page_size, use_pallas=use_pallas,
-                                  lib=lib, record_trace=record_trace)
+                                  lib=lib, record_trace=record_trace,
+                                  mesh=mesh)
         self.use_pallas = use_pallas
         # interpret-mode plumbing (was hardcoded True): default follows
         # the backend — compiled kernels on TPU, interpreter elsewhere
@@ -340,23 +402,58 @@ class PagedEngine:
     def _layer_params(self):
         return self.params["group0"]
 
+    def _sharded_specs(self, n_args, arena_at):
+        """in_specs for a shard_map-wrapped step: params (arg 0) follow
+        the resolved spec tree, arenas split on the KV-head axis, and
+        everything else — block tables, lengths, scatter plans, seeds,
+        temperatures — is replicated."""
+        specs = [P()] * n_args
+        specs[0] = self._param_specs
+        for i in arena_at:
+            specs[i] = self._arena_spec
+        return tuple(specs)
+
+    def _shard_wrap(self, fn, n_args, arena_at, n_extra_out=1):
+        """Wrap a fused step fn as a shard_map program over the mesh:
+        one dispatch spanning every device.  Outputs are ``n_extra_out``
+        replicated values (tokens — identical on every shard, the final
+        logit reduce and sampling run replicated) followed by the two
+        sharded arenas.  ``check_rep=False``: the collectives guarantee
+        the replication the spec claims; jax's checker cannot see
+        through the masked gathers."""
+        out_specs = (P(),) * n_extra_out + (self._arena_spec,
+                                            self._arena_spec)
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=self._sharded_specs(n_args, arena_at),
+                         out_specs=out_specs, check_rep=False)
+
+    def _step_kwargs(self):
+        kw = dict(use_pallas=self.use_pallas, interpret=self.interpret)
+        if self.mesh is not None:
+            kw.update(axis="model", compressed=self.compressed_collectives)
+        return kw
+
     def _build_fused_step(self):
         """One jit covering forward + KV scatter + token selection.
 
         The Python body only runs when jax traces (cache miss), so the
         closure's counter bump is exactly a retrace counter.  Arenas are
         donated where the backend supports it (TPU/GPU) so the in-jit
-        scatter is an in-place update.
+        scatter is an in-place update.  With a mesh, the whole step runs
+        as a shard_map program (constructed inside the traced body, so
+        the retrace counter keeps its meaning).
         """
         eng = self
 
         def step(params, last, k_arena, v_arena, bt, lens, pages, slots,
                  seed, temps):
             eng.stats["jit_traces"] += 1
-            return _fused_decode_step(
-                eng.cfg, eng.pcfg, params, last, k_arena, v_arena, bt, lens,
-                pages, slots, seed, temps, use_pallas=eng.use_pallas,
-                interpret=eng.interpret)
+            fn = functools.partial(_fused_decode_step, eng.cfg, eng.pcfg,
+                                   **eng._step_kwargs())
+            if eng.mesh is not None:
+                fn = eng._shard_wrap(fn, 10, (2, 3))
+            return fn(params, last, k_arena, v_arena, bt, lens,
+                      pages, slots, seed, temps)
 
         donate = (2, 3) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate)
@@ -372,10 +469,13 @@ class PagedEngine:
         def step(params, toks, lens, k_arena, v_arena, pages, slots, src,
                  seed, temps, has_writes):
             eng.stats["prefill_jit_traces"] += 1
-            return _fused_prefill_step(
-                eng.cfg, eng.pcfg, params, toks, lens, k_arena, v_arena,
-                pages, slots, src, seed, temps, has_writes=has_writes,
-                use_pallas=eng.use_pallas, interpret=eng.interpret)
+            fn = functools.partial(_fused_prefill_step, eng.cfg, eng.pcfg,
+                                   has_writes=has_writes,
+                                   **eng._step_kwargs())
+            if eng.mesh is not None:
+                fn = eng._shard_wrap(fn, 10, (3, 4))
+            return fn(params, toks, lens, k_arena, v_arena,
+                      pages, slots, src, seed, temps)
 
         donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate,
@@ -392,11 +492,13 @@ class PagedEngine:
         def step(params, toks, lens, offs, k_arena, v_arena, bt, plens,
                  pages, slots, src, seed, temps, has_writes):
             eng.stats["prefill_jit_traces"] += 1
-            return _fused_chunk_prefill_step(
-                eng.cfg, eng.pcfg, params, toks, lens, offs, k_arena,
-                v_arena, bt, plens, pages, slots, src, seed, temps,
-                has_writes=has_writes, use_pallas=eng.use_pallas,
-                interpret=eng.interpret)
+            fn = functools.partial(_fused_chunk_prefill_step, eng.cfg,
+                                   eng.pcfg, has_writes=has_writes,
+                                   **eng._step_kwargs())
+            if eng.mesh is not None:
+                fn = eng._shard_wrap(fn, 13, (4, 5))
+            return fn(params, toks, lens, offs, k_arena, v_arena, bt,
+                      plens, pages, slots, src, seed, temps)
 
         donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate,
@@ -414,10 +516,12 @@ class PagedEngine:
         def step(params, last, steps, k_arena, v_arena, bt, lens, pages,
                  slots, eos, seed, temps, rowmap):
             eng.stats["block_jit_traces"] += 1
-            return _fused_block_step(
-                eng.cfg, eng.pcfg, params, last, steps, k_arena, v_arena,
-                bt, lens, pages, slots, eos, seed, temps, rowmap,
-                use_pallas=eng.use_pallas, interpret=eng.interpret)
+            fn = functools.partial(_fused_block_step, eng.cfg, eng.pcfg,
+                                   **eng._step_kwargs())
+            if eng.mesh is not None:
+                fn = eng._shard_wrap(fn, 13, (3, 4))
+            return fn(params, last, steps, k_arena, v_arena, bt, lens,
+                      pages, slots, eos, seed, temps, rowmap)
 
         donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate)
@@ -437,12 +541,15 @@ class PagedEngine:
                  d_last, d_bt, d_lens, d_pages, d_slots, d_seed, d_temps,
                  d_from_chunk, has_writes):
             eng.stats["mixed_jit_traces"] += 1
-            return _fused_mixed_step(
-                eng.cfg, eng.pcfg, params, c_toks, c_lens, c_offs, k_arena,
-                v_arena, c_bt, c_plens, c_pages, c_slots, c_src, c_seed,
-                c_temps, d_last, d_bt, d_lens, d_pages, d_slots, d_seed,
-                d_temps, d_from_chunk, has_writes=has_writes,
-                use_pallas=eng.use_pallas, interpret=eng.interpret)
+            fn = functools.partial(_fused_mixed_step, eng.cfg, eng.pcfg,
+                                   has_writes=has_writes,
+                                   **eng._step_kwargs())
+            if eng.mesh is not None:
+                fn = eng._shard_wrap(fn, 21, (4, 5), n_extra_out=2)
+            return fn(params, c_toks, c_lens, c_offs, k_arena, v_arena,
+                      c_bt, c_plens, c_pages, c_slots, c_src, c_seed,
+                      c_temps, d_last, d_bt, d_lens, d_pages, d_slots,
+                      d_seed, d_temps, d_from_chunk)
 
         donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
         return jax.jit(step, donate_argnums=donate,
@@ -1044,12 +1151,16 @@ class PagedEngine:
 
 def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
                        pages, slots, seed, temps, *, use_pallas: bool,
-                       interpret: bool):
+                       interpret: bool, axis: Optional[str] = None,
+                       compressed: bool = False):
     """Forward (scan over layers) + KV scatter + token selection: the
-    whole decode round as one compiled program over donated arenas."""
+    whole decode round as one compiled program over donated arenas.
+    With ``axis`` (inside shard_map) the forward is tensor-parallel and
+    the scatter writes each shard's local head slice."""
     logits, k_new, v_new = _paged_decode_forward(
         cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
-        use_pallas=use_pallas, interpret=interpret)
+        use_pallas=use_pallas, interpret=interpret, axis=axis,
+        compressed=compressed)
     k_arena = rc_ops.kv_scatter_inline(
         k_arena, pages, slots, k_new[:, :, 0].astype(k_arena.dtype),
         use_pallas=use_pallas, interpret=interpret)
@@ -1068,7 +1179,8 @@ def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
 
 def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
                       lens, pages, slots, eos, seed, temps, rowmap, *,
-                      use_pallas: bool, interpret: bool):
+                      use_pallas: bool, interpret: bool,
+                      axis: Optional[str] = None, compressed: bool = False):
     """Up to K decode rounds as ONE compiled program: a ``while_loop``
     whose carry holds the per-row state a round-at-a-time host loop
     would bounce through Python — current lengths, last tokens, alive
@@ -1096,7 +1208,8 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
         t, alive, lens, last, toks, k_arena, v_arena = carry
         logits, k_new, v_new = _paged_decode_forward(
             cfg, pcfg, params, last[:, None], k_arena, v_arena, bt, lens,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret, axis=axis,
+            compressed=compressed)
         p_t = jax.lax.dynamic_index_in_dim(pages, t, axis=1, keepdims=False)
         s_t = jax.lax.dynamic_index_in_dim(slots, t, axis=1, keepdims=False)
 
@@ -1139,7 +1252,8 @@ def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
                       v_arena, c_bt, c_plens, c_pages, c_slots, c_src,
                       c_seed, c_temps, d_last, d_bt, d_lens, d_pages,
                       d_slots, d_seed, d_temps, d_from_chunk, *,
-                      has_writes: bool, use_pallas: bool, interpret: bool):
+                      has_writes: bool, use_pallas: bool, interpret: bool,
+                      axis: Optional[str] = None, compressed: bool = False):
     """A whole mixed round as one compiled program: the chunk half runs
     first (its scatter is traced before the decode forward, so a prompt
     finishing this round decodes against its own just-written KV — the
@@ -1150,13 +1264,14 @@ def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
     c_tokens, k_arena, v_arena = _fused_chunk_prefill_step(
         cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena, v_arena, c_bt,
         c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
-        has_writes=has_writes, use_pallas=use_pallas, interpret=interpret)
+        has_writes=has_writes, use_pallas=use_pallas, interpret=interpret,
+        axis=axis, compressed=compressed)
     last = jnp.where(d_from_chunk >= 0,
                      c_tokens[jnp.clip(d_from_chunk, 0, None)], d_last)
     d_tokens, k_arena, v_arena = _fused_decode_step(
         cfg, pcfg, params, last[:, None], k_arena, v_arena, d_bt, d_lens,
         d_pages, d_slots, d_seed, d_temps, use_pallas=use_pallas,
-        interpret=interpret)
+        interpret=interpret, axis=axis, compressed=compressed)
     return c_tokens, d_tokens, k_arena, v_arena
 
 
@@ -1168,7 +1283,8 @@ def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
 def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
                         pages, slots, src, seed, temps, *,
                         has_writes: bool, use_pallas: bool,
-                        interpret: bool):
+                        interpret: bool, axis: Optional[str] = None,
+                        compressed: bool = False):
     """Masked prefill forward + in-jit KV scatter + first-token
     selection: a whole prefill batch as one compiled program over
     donated arenas.
@@ -1182,7 +1298,8 @@ def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
     """
     logits, k_all, v_all = _prefill_forward(cfg, pcfg, params, toks, lens,
                                             use_pallas=use_pallas,
-                                            interpret=interpret)
+                                            interpret=interpret, axis=axis,
+                                            compressed=compressed)
     L = k_all.shape[0]
     Bp, Sp = toks.shape
 
@@ -1204,7 +1321,8 @@ def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
 def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
                               v_arena, bt, plens, pages, slots, src, seed,
                               temps, *, has_writes: bool, use_pallas: bool,
-                              interpret: bool):
+                              interpret: bool, axis: Optional[str] = None,
+                              compressed: bool = False):
     """Chunk forward (prefix-KV attention over committed arena pages) +
     in-jit chunk-KV scatter + token selection: one prefill chunk batch
     as one compiled program over donated arenas.
@@ -1219,7 +1337,8 @@ def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
     """
     logits, k_all, v_all = _chunk_prefill_forward(
         cfg, pcfg, params, toks, lens, offs, k_arena, v_arena, bt, plens,
-        use_pallas=use_pallas, interpret=interpret)
+        use_pallas=use_pallas, interpret=interpret, axis=axis,
+        compressed=compressed)
     L = k_all.shape[0]
     Bp, Sp = toks.shape
 
@@ -1240,7 +1359,9 @@ def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
 
 def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
                            k_arena, v_arena, bt, plens, *,
-                           use_pallas: bool = False, interpret: bool = True):
+                           use_pallas: bool = False, interpret: bool = True,
+                           axis: Optional[str] = None,
+                           compressed: bool = False):
     """Batched forward over one prefill *chunk* per row: ``lax.scan``
     over the stacked layer params AND the per-layer arena slices, with
     prefix-KV flash attention — each row's queries attend causally over
@@ -1257,7 +1378,7 @@ def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
     B, S = toks.shape
     ps = k_arena.shape[2]                # page size
     W = bt.shape[1]
-    x = embed(params["embed"], toks, cfg)
+    x = _embed_tokens(params["embed"], toks, cfg, axis)
     positions = offs[:, None] + jnp.broadcast_to(
         jnp.arange(S, dtype=jnp.int32), (B, S))
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
@@ -1281,7 +1402,7 @@ def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
         k_toks = v_toks = None
         for i, kind in enumerate(kinds):
             x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend)
+                                  sin, cos, attend, axis=axis)
             if kv is not None:
                 k_toks, v_toks = kv
         return x, (k_toks, v_toks)
@@ -1292,13 +1413,14 @@ def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
     # each row's last REAL chunk token (pad rows mirror row 0, lens >= 1)
     x_last = jnp.take_along_axis(
         x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
-    logits = logits_out(params["embed"], x_last, cfg,
-                        fp32=pcfg.logits_fp32)
+    logits = _logits_reduce(params["embed"], x_last, cfg, axis, compressed,
+                            fp32=pcfg.logits_fp32)
     return logits[:, 0], k_all, v_all
 
 
 def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
-                     use_pallas: bool = False, interpret: bool = True):
+                     use_pallas: bool = False, interpret: bool = True,
+                     axis: Optional[str] = None, compressed: bool = False):
     """Batched prefill forward over a length-padded prompt batch:
     ``lax.scan`` over the stacked layer params (O(1) program size in
     depth) with causal + per-sequence-length masked flash attention —
@@ -1311,7 +1433,7 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
     """
     hd = cfg.resolved_head_dim
     B, S = toks.shape
-    x = embed(params["embed"], toks, cfg)
+    x = _embed_tokens(params["embed"], toks, cfg, axis)
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
@@ -1328,7 +1450,7 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
         k_toks = v_toks = None
         for i, kind in enumerate(kinds):
             x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend)
+                                  sin, cos, attend, axis=axis)
             if kv is not None:
                 k_toks, v_toks = kv
         return x, (k_toks, v_toks)
@@ -1338,8 +1460,8 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
     # each row's last REAL token (pad rows mirror row 0, lens >= 1)
     x_last = jnp.take_along_axis(
         x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
-    logits = logits_out(params["embed"], x_last, cfg,
-                        fp32=pcfg.logits_fp32)
+    logits = _logits_reduce(params["embed"], x_last, cfg, axis, compressed,
+                            fp32=pcfg.logits_fp32)
     return logits[:, 0], k_all, v_all
 
 
@@ -1375,16 +1497,79 @@ def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
                         operand=None)
 
 
-def _sublayer(cfg, kind, sp, x, sin, cos, attend):
+def _embed_tokens(p, tokens, cfg, axis=None):
+    """Token embedding, host-local or vocab-parallel.
+
+    Inside shard_map each shard holds vocab rows
+    ``[axis_index * V_local, (axis_index + 1) * V_local)``: the shard
+    owning a token contributes its exact (cast) table row, every other
+    shard contributes exact zeros, and the ``psum`` is therefore
+    bit-identical to the host-local ``jnp.take`` — adding 0.0 to a
+    float is exact."""
+    if axis is None:
+        return embed(p, tokens, cfg)
+    vloc = p["tok"].shape[0]
+    start = jax.lax.axis_index(axis).astype(jnp.int32) * vloc
+    local = tokens - start
+    ok = (local >= 0) & (local < vloc)
+    x = cast(jnp.take(p["tok"], jnp.clip(local, 0, vloc - 1), axis=0))
+    x = jnp.where(ok[..., None], x, jnp.zeros_like(x))
+    x = jax.lax.psum(x, axis)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits_reduce(p, x, cfg, axis=None, compressed=False, fp32=True):
+    """Output logits, host-local or vocab-parallel.
+
+    Sharded: each shard computes its local (B, S, V_local) slice — the
+    contraction dim (d_model) is NOT sharded, so each output element is
+    the same multiply-accumulate the host-local einsum performs — then
+    places it at ``axis_index * V_local`` in a zeros(V) buffer and
+    reduces.  Plain ``psum`` sums exact zeros into each element
+    (bit-identical to host-local math); ``compressed=True`` routes the
+    reduce through :func:`repro.distributed.compression.psum_compressed`
+    (int8 wire traffic, one quantization in / one out — logits agree to
+    quantization tolerance, and the replicated argmax still picks one
+    token for all shards)."""
+    if axis is None:
+        return logits_out(p, x, cfg, fp32=fp32)
+    table = p.get("out", p["tok"])
+    out = jnp.einsum("bsd,vd->bsv", x, cast(table))
+    if fp32:
+        out = out.astype(jnp.float32)
+    vloc = table.shape[0]
+    world = _axis_size(axis)
+    full = jnp.zeros(out.shape[:-1] + (vloc * world,), out.dtype)
+    idx = (jnp.int32(0),) * (out.ndim - 1) + (
+        jax.lax.axis_index(axis).astype(jnp.int32) * vloc,)
+    full = jax.lax.dynamic_update_slice(full, out, idx)
+    if compressed:
+        return psum_compressed(full, axis)
+    return jax.lax.psum(full, axis)
+
+
+def _sublayer(cfg, kind, sp, x, sin, cos, attend, axis=None):
     """One decoder sublayer — the one source of truth shared by the
     fused decode scan, the eager decode loop, AND the fused prefill
     scan.  ``attend(q, k, v)`` supplies the attention dispatch over the
     full (b, s, h, hd) projections (decode callers attend one token
     against the arena, prefill callers run the length-masked flash
-    kernel).  Returns (x, (k, v) | None) with k/v (b, s, kvh, hd)."""
+    kernel).  Returns (x, (k, v) | None) with k/v (b, s, kvh, hd).
+
+    ``axis`` (inside shard_map): the weights are each shard's local
+    slice — wq/wk/wv column-parallel over heads, wo and the MLP down
+    projection row-parallel — so the only collectives a layer needs are
+    the two residual-branch ``psum``s (Megatron-style TP).  The
+    returned k/v are the shard's LOCAL kv-head slice: exactly what its
+    arena shard stores."""
     h = rmsnorm(x, sp["norm"], cfg.norm_eps)
     if kind != "attn":
-        return x + mlp(sp["mlp"], h, cfg.activation), None
+        y = mlp(sp["mlp"], h, cfg.activation)
+        if axis is not None:
+            y = jax.lax.psum(y, axis)
+        return x + y, None
     q = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wq"]))
     k = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wk"]))
     v = jnp.einsum("bsd,dhk->bshk", h, cast(sp["attn"]["wv"]))
@@ -1392,20 +1577,28 @@ def _sublayer(cfg, kind, sp, x, sin, cos, attend):
     k = apply_rope(k, sin, cos)
     o = attend(q, k, v)
     out = jnp.einsum("bshk,hkd->bsd", o, cast(sp["attn"]["wo"]))
+    if axis is not None:
+        out = jax.lax.psum(out, axis)
     return x + out, (k, v)
 
 
 def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                           v_arena, block_tables, lengths, *,
-                          use_pallas: bool = False, interpret: bool = True):
+                          use_pallas: bool = False, interpret: bool = True,
+                          axis: Optional[str] = None,
+                          compressed: bool = False):
     """Decoder forward for one token: ``lax.scan`` over the stacked
     layer params and the per-layer arena slices — O(1) program size in
     depth, and the current token's K/V merges inside the paged kernel.
 
+    With ``axis`` (inside shard_map) the params/arenas are each shard's
+    local head slice and the activations are tensor-parallel (see
+    :func:`_sublayer` / :func:`_logits_reduce`).
+
     Returns (logits (b,1,V), k_new, v_new (L, b, 1, kvh, hd)).
     """
     hd = cfg.resolved_head_dim
-    x = embed(params["embed"], tokens, cfg)
+    x = _embed_tokens(params["embed"], tokens, cfg, axis)
     positions = lengths[:, None].astype(jnp.int32)  # token pos == length
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
@@ -1425,7 +1618,7 @@ def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
         k_tok = v_tok = None
         for i, kind in enumerate(kinds):
             x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend)
+                                  sin, cos, attend, axis=axis)
             if kv is not None:
                 k_tok, v_tok = kv[0][:, 0], kv[1][:, 0]
         return x, (k_tok, v_tok)
@@ -1433,7 +1626,7 @@ def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
     x, (k_news, v_news) = jax.lax.scan(
         body, x, (params["group0"], k_arena, v_arena))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_out(params["embed"], x, cfg)
+    logits = _logits_reduce(params["embed"], x, cfg, axis, compressed)
     return logits, k_news[:, :, None], v_news[:, :, None]
 
 

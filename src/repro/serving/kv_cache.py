@@ -75,7 +75,8 @@ class PagedKVCache:
     def __init__(self, cfg: ModelConfig, *, num_pages: int = 128,
                  page_size: int = 16, num_slabs: int = 4,
                  dtype=jnp.bfloat16, use_pallas: bool = False,
-                 lib: Optional[PimLib] = None, record_trace: bool = False):
+                 lib: Optional[PimLib] = None, record_trace: bool = False,
+                 mesh=None):
         assert num_pages % num_slabs == 0
         hd = cfg.resolved_head_dim
         self.cfg = cfg
@@ -86,21 +87,37 @@ class PagedKVCache:
         kvh = cfg.num_kv_heads
         k0 = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
         v0 = jnp.zeros((self.n_layers, num_pages, page_size, kvh, hd), dtype)
+        # sharded serving: the arenas stay single GLOBAL arrays, laid out
+        # with the KV-head axis split over the mesh's `model` dimension —
+        # every device holds its head slice of every page, so page ids,
+        # block tables, and the op queue are mesh-wide concepts
+        self.mesh = mesh
+        n_shard = mesh.shape["model"] if mesh is not None else 1
+        if n_shard > 1:
+            if kvh % n_shard != 0:
+                raise ValueError(
+                    f"num_kv_heads={kvh} not divisible by mesh model "
+                    f"axis {n_shard}")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            ns = NamedSharding(mesh, P(None, None, None, "model", None))
+            k0 = jax.device_put(k0, ns)
+            v0 = jax.device_put(v0, ns)
         self.allocator = SubarrayAllocator(
             arena_groups(num_slabs, num_pages // num_slabs))
         # arena mutations route through a JAX-face PimLib; callers may
         # supply one to unify dispatch accounting across clients
+        shard_kw = dict(shard_axis=3, mesh=mesh) if n_shard > 1 else {}
         if lib is None:
             lib = TpuLib(buffers=[k0, v0], layered=True,
                          allocator=self.allocator, use_pallas=use_pallas,
-                         deferred=True)
+                         deferred=True, tag="kv", **shard_kw)
         else:
             if lib.face != "jax":
                 raise ValueError(
                     f"PagedKVCache needs a JAX-face PimLib, got {lib.face!r}"
                     " (replay a recorded trace for model-face accounting)")
             lib.adopt_buffers([k0, v0], layered=True,
-                              allocator=self.allocator)
+                              allocator=self.allocator, **shard_kw)
         self.lib = lib
         self.queue = lib.queue
         self.refcount: Dict[int, int] = {}

@@ -100,6 +100,54 @@ class TestGradCompression:
         assert out.returncode == 0, out.stdout + out.stderr
         assert "OK" in out.stdout
 
+    def test_quantize_zero_block_exact(self):
+        """An all-zero block must round-trip to EXACT zeros (scale floor
+        regression: an additive epsilon on the scale is harmless, but
+        padding blocks that dequantize to non-zero garbage would be
+        summed into real elements by psum_compressed)."""
+        from repro.distributed.compression import BLOCK, _dequantize, _quantize
+        x = jnp.zeros((2, 3 * BLOCK), jnp.float32)
+        codes, scale = _quantize(x)
+        assert int(jnp.abs(codes).max()) == 0
+        assert bool(jnp.all(jnp.isfinite(scale)))
+        back = _dequantize(codes, scale, 3 * BLOCK)
+        assert np.asarray(back == 0.0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 1000), seed=st.integers(0, 2**16))
+    def test_quantize_preserves_exact_zeros(self, n, seed):
+        """Elementwise property: wherever x is exactly 0.0, the int8
+        round trip returns exactly 0.0 — including the implicit padding
+        _quantize appends to fill the last block, and including blocks
+        that are entirely zero."""
+        from repro.distributed.compression import _dequantize, _quantize
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n).astype(np.float32)
+        x[rng.random(n) < 0.3] = 0.0
+        if n > 4:  # force one fully-zero span crossing block math
+            x[: n // 2] = 0.0
+        codes, scale = _quantize(jnp.asarray(x)[None])
+        back = np.asarray(_dequantize(codes, scale, n))[0]
+        assert (back[x == 0.0] == 0.0).all()
+
+    def test_psum_compressed_zero_and_pad_exact_1dev(self):
+        """mesh=1 in-process run of the full all_to_all/all_gather
+        pipeline: a length-257 input (pads to a second 256-block) with
+        exact-zero tail must come back with that tail EXACTLY zero, and
+        the non-zero part within one quantization step."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import psum_compressed
+        mesh = make_local_mesh(1, 1)
+        x = np.zeros(257, np.float32)
+        x[:100] = np.linspace(-3, 3, 100, dtype=np.float32)
+        out = shard_map(lambda v: psum_compressed(v, "model"),
+                        mesh=mesh, in_specs=P(), out_specs=P(),
+                        check_rep=False)(jnp.asarray(x))
+        out = np.asarray(out)
+        assert (out[100:] == 0.0).all()
+        assert np.abs(out[:100] - x[:100]).max() <= (6 / 127) * 1.01
+
 
 class TestTpuPimolib:
     def test_arena_copy_init_rand(self):
