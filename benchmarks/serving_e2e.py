@@ -1,5 +1,5 @@
 """End-to-end serving comparison (paper's system-level claim, transposed
-to the TPU framework), three tables:
+to the TPU framework), seven tables:
 
 1. RowClone-backed paged KV management (CoW fork + prefix sharing +
    pim_init page recycling) vs a naive engine that re-prefills shared
@@ -37,6 +37,15 @@ to the TPU framework), three tables:
    ``--xla_force_host_platform_device_count`` and are recorded as
    skipped on boxes under 4 cores (XLA host collectives spin-wait and
    deadlock there).
+
+7. Open-system saturation sweep: Poisson arrivals at >= 3 rates through
+   the async front door (``repro.serving.server.AsyncServer``) on a
+   shared-system-prompt trace.  Per rate: goodput-under-SLO (requests
+   admitted, completed, AND inside their deadline, per second), shed
+   fraction, TTFT/ITL p99s, the radix prefix cache's token hit-rate,
+   and the recorded trace replayed into RowClone-vs-CPU savings
+   (``replay_on_device``) — the open-loop numbers table 4's closed-loop
+   scenario cannot show.
 
 Metrics print as ``name,us_per_call,derived`` CSV and the fusion numbers
 are also written to ``BENCH_serving.json`` so CI tracks them per PR.
@@ -275,6 +284,76 @@ def _mixed_long_prompt(cfg, params, rng, *, chunk, n_decode, decode_new,
     }
 
 
+def _open_loop_table(cfg, params, *, smoke: bool) -> dict:
+    """Table-7 sweep: one open-loop Poisson trace per arrival rate.
+
+    Each rate gets a fresh chunked engine with the radix prefix cache
+    and trace recording on, warmed outside the measured trace (one
+    throwaway request pays the jit compiles).  The trace itself is the
+    multi-tenant workload from :func:`shared_prefix_prompts` — same
+    system prompt, per-request tails — driven by
+    :func:`poisson_open_loop` under the server's TTFT-SLO admission.
+    Afterwards the engine's recorded arena schedule replays on the
+    DDR3 twin, pricing every prefix hit as batched RowClone vs the CPU
+    re-prefill it avoided."""
+    import asyncio
+
+    from repro.launch.serve_async import (poisson_open_loop,
+                                          shared_prefix_prompts)
+    from repro.serving.server import AsyncServer
+    from repro.serving.trace import replay_on_device
+
+    rates = (4.0, 16.0, 64.0)
+    n_reqs = 8 if smoke else 24
+    prefix_len, tail_len = (16, 4) if smoke else (32, 8)
+    max_new = 4 if smoke else 12
+    chunk = 16 if smoke else 32
+    ttft_slo_ms = 4000.0 if smoke else 2000.0
+    deadline_ms = 8000.0 if smoke else 5000.0
+
+    async def run_rate(rate: float) -> dict:
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=256,
+                          max_prefill_chunk=chunk, prefix_cache=True,
+                          record_trace=True)
+        eng.submit(Request(10**6,
+                           np.arange(prefix_len + tail_len,
+                                     dtype=np.int32) % cfg.vocab_size,
+                           max_new_tokens=2, temperature=0.0))
+        eng.run()                             # warmup: pays the compiles
+        prompts = shared_prefix_prompts(n_reqs, cfg.vocab_size,
+                                        prefix_len=prefix_len,
+                                        tail_len=tail_len)
+        srv = AsyncServer(eng, ttft_slo_ms=ttft_slo_ms)
+        async with srv:
+            res = await poisson_open_loop(srv, prompts, rate,
+                                          max_new_tokens=max_new,
+                                          deadline_ms=deadline_ms)
+        res.pop("streams")
+        admitted = srv.stats["admitted"]
+        prompt_toks = max(admitted, 1) * (prefix_len + tail_len)
+        res["prefix_hit_rate"] = round(
+            eng.stats["prefix_hit_tokens"] / prompt_toks, 4)
+        res["prefix"] = {k: eng.stats[k] for k in
+                         ("prefix_hits", "prefix_hit_tokens",
+                          "prefix_evictions")}
+        rep = replay_on_device(eng.cache.trace)
+        res["replay_speedup"] = rep["speedup"]
+        res["prefix_rowclone_ns"] = {
+            "cpu_memcpy": rep["cpu_ns"]["prefix_hit_memcpy"],
+            "pim_rowclone": rep["pim_ns"]["prefix_hit_rowclone"],
+        }
+        for k in ("goodput_rps", "goodput_tok_s", "wall_s"):
+            res[k] = round(res[k], 3)
+        return res
+
+    return {"config": {"requests": n_reqs, "prefix_len": prefix_len,
+                       "tail_len": tail_len, "max_new": max_new,
+                       "chunk": chunk, "ttft_slo_ms": ttft_slo_ms,
+                       "deadline_ms": deadline_ms},
+            "rates": {f"rate{r:g}": asyncio.run(run_rate(r))
+                      for r in rates}}
+
+
 def _mesh_row_local(world: int, compressed: bool, smoke: bool) -> dict:
     """Measure one (mesh, collective) cell IN THIS PROCESS — requires
     ``jax.device_count() >= world``.  Same shape as table 2: warmup
@@ -486,6 +565,17 @@ def main(out=sys.stdout, smoke: bool = False):
             note = row.get("skipped", row.get("error", ""))
             print(f"sharded_{key},0,skipped={note}", file=out)
 
+    # ---- table 7: open-loop Poisson sweep, goodput under SLO ----------- #
+    orows = _open_loop_table(cfg, params, smoke=smoke)
+    for key, row in orows["rates"].items():
+        print(f"open_loop_{key},0,goodput_rps={row['goodput_rps']:.2f}"
+              f";rejected={row['rejected']}/{row['requests']}"
+              f";ttft_p99_ms={row['ttft_p99_ms'] or float('nan'):.1f}"
+              f";prefix_hit_rate={row['prefix_hit_rate']:.3f}"
+              f";prefix_rowclone_speedup="
+              f"{row['replay_speedup']['prefix'] or float('nan'):.1f}x",
+              file=out)
+
     bench = {
         "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec,
                    "prefill": pre},
@@ -522,6 +612,10 @@ def main(out=sys.stdout, smoke: bool = False):
         # table 6: tensor-parallel mesh x collective sweep (mesh>1 cells
         # record a skip note on hosts below 4 cores)
         "mesh_sweep": mrows,
+        # table 7: open-loop Poisson sweep through the async server —
+        # goodput under SLO, prefix-cache hit rate, replayed RowClone
+        # savings per arrival rate
+        "open_loop_sweep": orows,
     }
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     with open(path, "w") as f:

@@ -71,8 +71,14 @@ class PimOpQueue:
             "ops_coalesced": 0,       # logical ops folded into launches
             "hazard_flushes": 0,      # admit() flushes forced by hazards
             "overlap_flushes": 0,     # backlogs dispatched early to overlap
+            "ops_saved": 0,           # logical ops sharing made unnecessary
         }
         self.launches_by_kind: Dict[str, int] = {}
+        # logical ops that never had to run because pages were shared
+        # instead of rewritten (prefix-cache hits, pairwise sharing):
+        # kind -> count.  The complement of launches_by_kind — "work the
+        # dispatch path was spared", reported next to "work it did".
+        self.saved_by_kind: Dict[str, int] = {}
         # per-owner attribution: owner tag -> {kind: launches}.  A launch
         # that spans shards (one SPMD dispatch over N per-shard buffers)
         # counts ONCE in launches/launches_by_kind and once per
@@ -200,6 +206,16 @@ class PimOpQueue:
         for o in sorted(owners):
             per = self.launches_by_owner.setdefault(o, {})
             per[kind] = per.get(kind, 0) + n
+
+    def record_saved(self, kind: str, n: int = 1) -> None:
+        """Account ``n`` logical ops of ``kind`` that sharing made
+        unnecessary — e.g. a prefix-cache hit attaching 4 committed
+        pages saves their ``kv_write`` token scatters (and the forward
+        compute behind them).  Saved work is a first-class serving
+        metric: the RowClone-traffic story is precisely that these ops
+        become refcount bumps instead of launches."""
+        self.saved_by_kind[kind] = self.saved_by_kind.get(kind, 0) + n
+        self.stats["ops_saved"] += n
 
     def count_external(self, kind: str, n: int = 1,
                        owner=None) -> None:

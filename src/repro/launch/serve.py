@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
       --requests 8 --prompt-len 24 --max-new 16
+
+This is the closed-loop batch driver; the open-system async front door
+(streaming, Poisson arrivals, SLOs) lives in
+``repro.launch.serve_async``.
 """
 
 from __future__ import annotations
@@ -26,31 +30,51 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--share-prefix", action="store_true",
-                    help="second half of requests share the first prompt")
+                    help="second half of requests reuse the first prompt "
+                         "(minus a fresh 4-token tail); the radix prefix "
+                         "cache dedupes the shared pages automatically")
+    ap.add_argument("--share-pairwise", action="store_true",
+                    help="DEPRECATED: same workload through the legacy "
+                         "pairwise share_with/shared_len arithmetic the "
+                         "prefix cache replaced — kept as the sharing "
+                         "parity oracle")
     ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch])
     params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
-    engine = PagedEngine(cfg, params, page_size=args.page_size)
+    engine = PagedEngine(cfg, params, page_size=args.page_size,
+                         prefix_cache=args.share_prefix)
 
     rng = np.random.default_rng(0)
     base_prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
+    results = {}
     t0 = time.time()
-    for i in range(args.requests):
-        if args.share_prefix and i >= args.requests // 2:
+    if args.share_prefix:
+        # radix path: commit the base prompt once, then submit the
+        # sharers with no sharing arguments at all — create(...,
+        # tokens=) longest-prefix-matches their full pages against the
+        # committed tree
+        engine.submit(Request(0, base_prompt, max_new_tokens=args.max_new))
+        results.update(engine.run())
+    for i in range(1 if args.share_prefix else 0, args.requests):
+        if (args.share_prefix or args.share_pairwise) \
+                and i >= args.requests // 2:
             p = base_prompt.copy()
             p[-4:] = rng.integers(0, cfg.vocab_size, 4)
-            engine.submit(Request(i, p, max_new_tokens=args.max_new,
-                                  share_with=0,
-                                  shared_len=(args.prompt_len - 4)
-                                  // args.page_size * args.page_size))
+            if args.share_pairwise:
+                engine.submit(Request(i, p, max_new_tokens=args.max_new,
+                                      share_with=0,
+                                      shared_len=(args.prompt_len - 4)
+                                      // args.page_size * args.page_size))
+            else:
+                engine.submit(Request(i, p, max_new_tokens=args.max_new))
         else:
             engine.submit(Request(i, base_prompt if i == 0 else
                                   rng.integers(0, cfg.vocab_size,
                                                args.prompt_len).astype(np.int32),
                                   max_new_tokens=args.max_new))
-    results = engine.run()
+    results.update(engine.run())
     dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     print(json.dumps({
@@ -58,6 +82,7 @@ def main() -> None:
         "tok_per_s": round(toks / dt, 1),
         "engine_stats": engine.stats,
         "cache_stats": engine.cache.stats,
+        "ops_saved_by_sharing": engine.cache.queue.saved_by_kind,
         "pages_in_use_at_end": engine.cache.pages_in_use,
     }, indent=1))
     for rid in sorted(results)[:4]:

@@ -221,7 +221,8 @@ class PagedEngine:
                  max_prefill_chunk: Optional[int] = None,
                  decode_block_rounds: int = 1, mixed_rounds: bool = True,
                  lib=None, record_trace: bool = False,
-                 mesh=None, compressed_collectives: bool = False):
+                 mesh=None, compressed_collectives: bool = False,
+                 prefix_cache: bool = False):
         assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
         self.cfg = cfg
         self.pcfg = pcfg or ParallelConfig(attention_impl="naive", remat="none")
@@ -262,10 +263,16 @@ class PagedEngine:
         # lib: caller-supplied JAX-face PimLib (pimolib v2) the cache
         # binds its arenas to — shares the op queue / launch accounting;
         # record_trace: keep a PimTrace for model-face replay
+        # prefix_cache: radix-tree prefix cache over pages — prompts
+        # automatically attach the longest committed full-page prefix of
+        # any earlier prompt (create(..., tokens=)), committed prompts
+        # index on completion (commit_prefix), cold entries evict LRU
+        # under arena pressure
+        self.prefix_cache = prefix_cache
         self.cache = PagedKVCache(cfg, num_pages=num_pages,
                                   page_size=page_size, use_pallas=use_pallas,
                                   lib=lib, record_trace=record_trace,
-                                  mesh=mesh)
+                                  mesh=mesh, prefix_cache=prefix_cache)
         self.use_pallas = use_pallas
         # interpret-mode plumbing (was hardcoded True): default follows
         # the backend — compiled kernels on TPU, interpreter elsewhere
@@ -304,7 +311,9 @@ class PagedEngine:
                       "prefill_jit_traces": 0, "fused_prefill_dispatches": 0,
                       "prefill_chunks": 0, "decode_stall_rounds": 0,
                       "multi_round_blocks": 0, "block_jit_traces": 0,
-                      "mixed_dispatches": 0, "mixed_jit_traces": 0}
+                      "mixed_dispatches": 0, "mixed_jit_traces": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefix_evictions": 0}
         self._step = self._build_fused_step() if fused else None
         self._prefill_step = (self._build_fused_prefill_step()
                               if fused_prefill else None)
@@ -324,6 +333,44 @@ class PagedEngine:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        """Anything queued, mid-prefill, or decoding?"""
+        return bool(self.queue or self._chunk_q or self.active)
+
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens admitted but not yet committed to the arena:
+        the chunk backlog's remaining work plus everything still in the
+        submit queue.  The server's admission control divides this by
+        the chunk budget to estimate how many rounds a new prompt waits
+        before its first token."""
+        return (sum(st.remaining for st in self._chunk_q)
+                + sum(len(r.prompt) for r in self.queue))
+
+    def set_prefill_chunk(self, n: int) -> None:
+        """Retarget the per-round prefill chunk budget at runtime — the
+        server's auto-tuner hook.  Legal only when the engine was built
+        chunked (``max_prefill_chunk`` set at construction compiles the
+        chunk/mixed steps); the budget is read fresh each scheduling
+        tick, and chunk lengths bucket to powers of two, so moving it
+        between pow2 values costs at most one retrace per new bucket."""
+        if self.max_prefill_chunk is None:
+            raise ValueError(
+                "engine was built without chunked prefill "
+                "(max_prefill_chunk=None); the chunk step only compiles "
+                "at construction")
+        if n < 1:
+            raise ValueError("max_prefill_chunk must be >= 1")
+        self.max_prefill_chunk = int(n)
+
+    def step(self) -> Dict[int, List[int]]:
+        """Run ONE engine round (the async server's unit of work):
+        bounded prefill + the round's decode, returning any requests
+        that finished.  With ``decode_block_rounds=K`` a pure-decode
+        step may burn up to K rounds in its one dispatch — still one
+        bounded unit between two looks at the arrival queue."""
+        return self.run(max_rounds=1)
 
     def run(self, max_rounds: int = 1000) -> Dict[int, List[int]]:
         """Engine rounds until done: every round runs (at most) one
@@ -386,6 +433,10 @@ class PagedEngine:
         return results
 
     def _finish_done(self, results: Dict[int, List[int]]) -> None:
+        # mirror the cache's prefix-sharing counters (engine.stats is
+        # the one stats surface servers/benches read)
+        for key in ("prefix_hits", "prefix_hit_tokens", "prefix_evictions"):
+            self.stats[key] = self.cache.stats[key]
         for rid in list(self.active):
             r = self.active[rid]
             hit_eos = (r.eos_token_id is not None and r.out_tokens
@@ -570,11 +621,15 @@ class PagedEngine:
                 self._prefill(r)
             return toks
         # create every sequence in submission order first, so shared
-        # prefixes (`share_with`) resolve across bucket groups
+        # prefixes (`share_with`) resolve across bucket groups; tokens=
+        # lets the radix prefix cache longest-prefix-match each prompt
+        # against every previously COMMITTED prompt (a batch submitted
+        # together can't hit on itself — inserts happen at commit)
         for r in reqs:
             self.cache.create(r.req_id, len(r.prompt),
                               share_with=r.share_with,
-                              shared_len=r.shared_len)
+                              shared_len=r.shared_len,
+                              tokens=r.prompt)
         groups: Dict[int, List[Request]] = {}
         for r in reqs:
             groups.setdefault(_bucket_pow2(len(r.prompt)), []).append(r)
@@ -671,7 +726,8 @@ class PagedEngine:
         for r in reqs:
             seq = self.cache.create(r.req_id, len(r.prompt),
                                     share_with=r.share_with,
-                                    shared_len=r.shared_len)
+                                    shared_len=r.shared_len,
+                                    tokens=r.prompt)
             off = seq.shared_prefix_pages * self.cache.page_size
             n = len(r.prompt)
             if off >= n:
@@ -758,6 +814,8 @@ class PagedEngine:
                 self.active[st.req.req_id] = st.req
                 self.stats["prefills"] += 1
                 del self._chunk_by_id[st.req.req_id]
+                # the prompt's full pages now hold real KV: index them
+                self.cache.commit_prefix(st.req.req_id, st.req.prompt)
             else:
                 unfinished.append(st)
         return unfinished
@@ -914,6 +972,10 @@ class PagedEngine:
             pages = [0] * N
             slots = [0] * N
             src = [0] * N
+        # the step reads the arena (shared-prefix gathers) — any backlog
+        # (e.g. prefix-cache eviction inits from create-time pressure)
+        # must land first
+        self.cache.flush_pending()
         self.rng_ctr += 1
         seed = self.rng_seed + jnp.uint32(self.rng_ctr)
         tokens, k_arena, v_arena = self._prefill_step(
@@ -929,6 +991,7 @@ class PagedEngine:
             r.out_tokens.append(int(toks_np[i]))
             self.active[r.req_id] = r
             self.stats["prefills"] += 1
+            self.cache.commit_prefix(r.req_id, r.prompt)
         self.stats["fused_prefill_dispatches"] += 1
 
     def _prefill(self, req: Request) -> None:
@@ -939,7 +1002,8 @@ class PagedEngine:
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
         seq = self.cache.create(req.req_id, len(req.prompt),
                                 share_with=req.share_with,
-                                shared_len=req.shared_len)
+                                shared_len=req.shared_len,
+                                tokens=req.prompt)
         start = seq.shared_prefix_pages * self.cache.page_size
         # full prefill forward (dense prefill math), then write kv pages
         max_len = len(req.prompt)
@@ -956,6 +1020,7 @@ class PagedEngine:
         req.out_tokens.append(int(tok[0]))
         self.active[req.req_id] = req
         self.stats["prefills"] += 1
+        self.cache.commit_prefix(req.req_id, req.prompt)
 
     def _reserve_tails(self, rids: List[int]) -> None:
         """Reserve the incoming token's slot on every sequence in

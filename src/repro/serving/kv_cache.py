@@ -50,8 +50,9 @@ dispatches in the queue's launch counters — ``fused_decode`` /
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence as Seq, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +61,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
 from repro.core.pimolib import PimLib, TpuLib
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.trace import PimTrace
 
 
@@ -76,7 +78,7 @@ class PagedKVCache:
                  page_size: int = 16, num_slabs: int = 4,
                  dtype=jnp.bfloat16, use_pallas: bool = False,
                  lib: Optional[PimLib] = None, record_trace: bool = False,
-                 mesh=None):
+                 mesh=None, prefix_cache: bool = False):
         assert num_pages % num_slabs == 0
         hd = cfg.resolved_head_dim
         self.cfg = cfg
@@ -123,7 +125,20 @@ class PagedKVCache:
         self.refcount: Dict[int, int] = {}
         self.page_alloc: Dict[int, object] = {}
         self.seqs: Dict[int, Sequence] = {}
-        self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0}
+        self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0,
+                      "prefix_hit_tokens": 0, "prefix_evictions": 0}
+        # global radix prefix cache: committed full prompt pages index
+        # into a trie (one node per token page), new prompts attach
+        # their longest committed prefix automatically at create(...,
+        # tokens=).  The tree holds its own refcount on every indexed
+        # page; eviction releases it through the normal init-on-free
+        # path.
+        self.prefix: Optional[RadixPrefixCache] = None
+        if prefix_cache:
+            self.prefix = RadixPrefixCache(
+                page_size,
+                retain=self._retain_page,
+                release=self._release_evicted_prefix_page)
         self.trace: Optional[PimTrace] = None
         if record_trace:
             self.trace = PimTrace(num_pages=num_pages, num_slabs=num_slabs,
@@ -153,19 +168,53 @@ class PagedKVCache:
 
     # ------------------------- page management ------------------------ #
 
-    def _alloc_page(self, near: Optional[int] = None) -> int:
-        kw = {}
+    def _try_alloc(self, near: Optional[int] = None):
         if near is not None and near in self.page_alloc:
             try:
-                a = self.allocator.alloc(1, group=self.page_alloc[near].group)
+                return self.allocator.alloc(1,
+                                            group=self.page_alloc[near].group)
             except PimAllocError:
-                a = self.allocator.alloc(1)
-        else:
-            a = self.allocator.alloc(1)
+                pass
+        return self.allocator.alloc(1)
+
+    def _alloc_page(self, near: Optional[int] = None) -> int:
+        try:
+            a = self._try_alloc(near)
+        except PimAllocError:
+            # arena full: evict cold prefix-cache subtrees (LRU, leaves
+            # first) until a page frees up.  Only tree-exclusive pages
+            # (refcount 1) actually return to the allocator — evicting a
+            # node whose page live sequences still share just drops the
+            # tree's reference — so keep evicting until the allocator
+            # yields or the tree runs dry.
+            if self.prefix is None:
+                raise
+            while True:
+                if self.prefix.evict_lru(1) == 0:
+                    raise
+                try:
+                    a = self._try_alloc(near)
+                    break
+                except PimAllocError:
+                    continue
         page = a.rows[0]
         self.page_alloc[page] = a
         self.refcount[page] = 1
         return page
+
+    def _retain_page(self, page: int) -> None:
+        """Prefix-tree retain hook: the tree takes its own reference."""
+        self.refcount[page] += 1
+
+    def _release_evicted_prefix_page(self, page: int) -> None:
+        """Prefix-tree release hook (node evicted): drop the tree's
+        reference; an unshared page zeroes + frees through the usual
+        batched init-on-free path.  The init is only *enqueued* — the
+        next flush point (create/reserve callers flush before any
+        dispatch that reads the arenas) coalesces a whole eviction
+        sweep into one launch."""
+        self.stats["prefix_evictions"] += 1
+        self._release_page(page)
 
     def _release_page(self, page: int) -> None:
         """Drop a reference; on the last one, enqueue a batched
@@ -188,17 +237,53 @@ class PagedKVCache:
 
     def create(self, seq_id: int, prompt_len: int,
                share_with: Optional[int] = None,
-               shared_len: int = 0) -> Sequence:
+               shared_len: int = 0,
+               tokens: Optional[Seq[int]] = None) -> Sequence:
+        """Create a sequence, attaching any shareable prompt prefix.
+
+        ``tokens`` (the prompt's token ids) enables the automatic path:
+        the radix prefix cache longest-prefix-matches the prompt's full
+        pages against every previously committed prompt and attaches
+        the hit (refcount++ per page, no compute, no writes).
+
+        ``share_with=``/``shared_len=`` is the legacy *pairwise* path —
+        the caller names a live source sequence and pre-computes the
+        page-aligned shared length itself.  It keeps working (and is
+        still the parity oracle in tests) but new callers should pass
+        ``tokens=`` and let the tree do the matching; the pairwise form
+        warns ``DeprecationWarning`` when a prefix cache is enabled,
+        since mixing both on one cache splits the hit accounting.
+        """
         seq = Sequence(seq_id)
+        shared_pages: List[int] = []
         if share_with is not None and shared_len:
+            if self.prefix is not None:
+                warnings.warn(
+                    "share_with=/shared_len= is the legacy pairwise "
+                    "prefix API; pass tokens= and let the radix prefix "
+                    "cache match automatically", DeprecationWarning,
+                    stacklevel=2)
             src = self.seqs[share_with]
             n_shared = shared_len // self.page_size
-            for p in src.pages[:n_shared]:
+            shared_pages = list(src.pages[:n_shared])
+        elif tokens is not None and self.prefix is not None:
+            shared_pages = self.prefix.match(list(tokens)[:prompt_len])
+        if shared_pages:
+            for p in shared_pages:
                 self.refcount[p] += 1
                 seq.pages.append(p)
-            seq.length = n_shared * self.page_size
-            seq.shared_prefix_pages = n_shared
+            seq.length = len(shared_pages) * self.page_size
+            seq.shared_prefix_pages = len(shared_pages)
             self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += seq.length
+            # the hit displaced this many token writes (and the forward
+            # compute behind them) — account the spared work, and give
+            # the trace the bulk-copy event the hit stands in for
+            self.queue.record_saved("kv_write", seq.length)
+            if self.trace is not None:
+                self.trace.record_prefix_hit(
+                    shared_pages,
+                    nbytes=seq.length * self._kv_tok_bytes())
         while seq.length < prompt_len:
             seq.pages.append(self._alloc_page(
                 near=seq.pages[-1] if seq.pages else None))
@@ -206,6 +291,25 @@ class PagedKVCache:
         seq.length = prompt_len
         self.seqs[seq_id] = seq
         return seq
+
+    def commit_prefix(self, seq_id: int, tokens: Seq[int]) -> int:
+        """Index a sequence's now-committed prompt KV in the radix
+        prefix cache (no-op without one).  Call once the prompt's full
+        pages hold real KV — after the fused/eager prefill commit, or
+        when the last chunk of a chunked prefill lands.  Only full
+        pages index (the partial tail stays private — decode appends
+        into it); the tree retains each newly indexed page, so the
+        prefix outlives this sequence.  Returns the number of pages
+        newly indexed."""
+        if self.prefix is None:
+            return 0
+        seq = self.seqs[seq_id]
+        n_full = min(len(seq.pages), len(tokens) // self.page_size)
+        if n_full == 0:
+            return 0
+        return self.prefix.insert(
+            [int(t) for t in list(tokens)[:n_full * self.page_size]],
+            seq.pages[:n_full])
 
     def fork(self, src_id: int, dst_id: int) -> Sequence:
         """Beam/CoW fork: share full pages, RowClone-copy the partial tail."""
@@ -341,6 +445,19 @@ class PagedKVCache:
         for p in seq.pages:
             self._release_page(p)
         self.flush_pending()
+
+    def clear_prefix(self) -> int:
+        """Drop the whole radix prefix cache (shutdown / leak audit):
+        every tree-held page reference releases, unshared pages zero in
+        one coalesced init launch.  With no live sequences left,
+        ``pages_in_use`` must return to 0 afterwards — the
+        zero-leaked-pages invariant the tests pin.  Returns the number
+        of nodes evicted."""
+        if self.prefix is None:
+            return 0
+        n = self.prefix.evict_all()
+        self.flush_pending()
+        return n
 
     def _kv_tok_bytes(self) -> int:
         return (2 * self.n_layers * self.cfg.num_kv_heads

@@ -1,0 +1,254 @@
+"""Radix-tree prefix cache: trie semantics (insert/match/evict/LRU,
+refcount bridge) as property tests, radix-vs-pairwise sharing parity on
+the engine, the 100-request shared-system-prompt dedupe, and LRU
+eviction under arena pressure."""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _compat import given, settings, st
+
+from repro.configs import ARCHS, reduced
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import PagedEngine, Request
+from repro.serving.prefix_cache import RadixPrefixCache
+
+PS = 4            # page size for the pure-trie tests
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_tree():
+    """A tree over fake pages with an observable refcount ledger."""
+    rc = {}
+
+    def retain(p):
+        rc[p] = rc.get(p, 0) + 1
+
+    def release(p):
+        rc[p] -= 1
+
+    return RadixPrefixCache(PS, retain=retain, release=release), rc
+
+
+class TestRadixTree:
+    def test_insert_then_match_returns_full_page_prefix(self):
+        tree, rc = _mk_tree()
+        toks = [1, 2, 3, 4, 5, 6, 7, 8, 9]       # 2 full pages + tail
+        assert tree.match(toks) == []
+        assert tree.insert(toks, [10, 11, 12]) == 2   # tail page ignored
+        assert tree.match(toks) == [10, 11]
+        assert tree.match([1, 2, 3, 4, 99, 0, 0, 0]) == [10]
+        assert tree.match([9, 9, 9, 9]) == []
+        assert rc == {10: 1, 11: 1}
+
+    def test_duplicate_insert_keeps_first_committers_pages(self):
+        tree, rc = _mk_tree()
+        tree.insert([1, 2, 3, 4], [10])
+        assert tree.insert([1, 2, 3, 4, 5, 6, 7, 8], [20, 21]) == 1
+        # the shared first page stays node 10; page 20 took no tree ref
+        assert tree.match([1, 2, 3, 4, 5, 6, 7, 8]) == [10, 21]
+        assert rc == {10: 1, 21: 1}
+
+    def test_lru_eviction_leaves_first(self):
+        tree, rc = _mk_tree()
+        tree.insert([1, 2, 3, 4, 5, 6, 7, 8], [10, 11])   # chain A -> B
+        tree.insert([9, 9, 9, 9], [12])                   # C
+        tree.match([1, 2, 3, 4, 5, 6, 7, 8])              # touch the chain
+        # C is the coldest leaf; then the chain drains deepest-first
+        assert tree.evict_lru(1) == 1
+        assert sorted(tree.pages_indexed()) == [10, 11]
+        assert tree.evict_lru(1) == 1
+        assert tree.pages_indexed() == [10]               # leaf 11 first
+        assert tree.evict_all() == 1
+        assert all(v == 0 for v in rc.values())
+        assert tree.n_nodes == 0
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           n_prompts=st.integers(min_value=1, max_value=10))
+    def test_match_is_longest_committed_prefix(self, seed, n_prompts):
+        """Property: against a brute-force oracle, match() returns
+        exactly the longest full-page prefix shared with any committed
+        prompt, its pages carry the right token content, and the
+        refcount ledger always holds one tree ref per node — all of it
+        releasing on evict_all."""
+        rng = np.random.default_rng(seed)
+        tree, rc = _mk_tree()
+        committed = []               # token lists inserted so far
+        content = {}                 # page -> the token tuple it holds
+        next_page = 0
+        for _ in range(n_prompts):
+            if committed and rng.random() < 0.6:
+                # extend/diverge from a committed prompt: forces shared
+                # paths and branch points in the trie
+                base = list(committed[int(rng.integers(len(committed)))])
+                keep = int(rng.integers(0, len(base) + 1))
+                toks = base[:keep] + [int(t) for t in
+                                      rng.integers(0, 4,
+                                                   int(rng.integers(0, 10)))]
+            else:
+                toks = [int(t) for t in
+                        rng.integers(0, 4, int(rng.integers(1, 14)))]
+            if not toks:
+                continue
+            exp = 0                  # oracle: longest common full-page prefix
+            for c in committed:
+                m = 0
+                while ((m + 1) * PS <= min(len(c), len(toks))
+                       and c[m * PS:(m + 1) * PS]
+                       == toks[m * PS:(m + 1) * PS]):
+                    m += 1
+                exp = max(exp, m)
+            got = tree.match(toks)
+            assert len(got) == exp, (toks, committed)
+            for j, page in enumerate(got):
+                assert content[page] == tuple(toks[j * PS:(j + 1) * PS])
+            # commit, engine-style: matched pages reused, fresh pages
+            # for the rest
+            n_full = len(toks) // PS
+            pages = got + list(range(next_page, next_page + n_full - exp))
+            next_page += n_full - exp
+            for j in range(exp, n_full):
+                content[pages[j]] = tuple(toks[j * PS:(j + 1) * PS])
+            tree.insert(toks, pages)
+            committed.append(toks)
+            # exactly one tree ref per indexed page
+            live = tree.pages_indexed()
+            assert len(live) == tree.n_nodes
+            assert all(rc[p] == 1 for p in live)
+        tree.evict_all()
+        assert all(v == 0 for v in rc.values())
+        assert tree.stats["evictions"] == tree.stats["inserts"]
+
+
+class TestEnginePrefixCache:
+    def test_radix_matches_pairwise_oracle(self, model, rng):
+        """Radix-matched sharing vs the pairwise share_with oracle on
+        the same workload (two prompts sharing 12 of 16 tokens):
+        identical token streams, identical hit accounting, zero leaked
+        pages, and arenas both scrubbed to zero at the end."""
+        cfg, params = model
+        p0 = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        p1 = p0.copy()
+        p1[-4:] = rng.integers(0, cfg.vocab_size, 4)
+
+        pair = PagedEngine(cfg, params, page_size=4, num_pages=64)
+        pair.submit(Request(0, p0, max_new_tokens=3, temperature=0.0))
+        pair.submit(Request(1, p1, max_new_tokens=3, temperature=0.0,
+                            share_with=0, shared_len=12))
+        res_pair = pair.run()
+
+        radix = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                            prefix_cache=True)
+        radix.submit(Request(0, p0, max_new_tokens=3, temperature=0.0))
+        res_radix = radix.run()                 # commits p0's full pages
+        radix.submit(Request(1, p1, max_new_tokens=3, temperature=0.0))
+        res_radix.update(radix.run())
+
+        assert res_radix == res_pair
+        assert radix.stats["prefix_hits"] == 1
+        assert radix.stats["prefix_hit_tokens"] == 12   # 3 full pages
+        assert radix.cache.queue.saved_by_kind["kv_write"] == 12
+        # zero leaked pages: the pairwise engine frees everything with
+        # its sequences; the radix engine's survivors are exactly the
+        # tree-held prefix pages, released by clear_prefix
+        assert pair.cache.pages_in_use == 0
+        assert radix.cache.pages_in_use == radix.cache.prefix.n_nodes
+        radix.cache.clear_prefix()
+        assert radix.cache.pages_in_use == 0
+        # init-on-free scrubbed both arenas identically (all zeros)
+        for eng in (pair, radix):
+            assert not np.asarray(eng.cache.k_arena).any()
+            assert not np.asarray(eng.cache.v_arena).any()
+
+    def test_pairwise_api_warns_deprecation_with_prefix_cache(self, model,
+                                                              rng):
+        cfg, params = model
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                          prefix_cache=True)
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng.submit(Request(0, prompt, max_new_tokens=2, temperature=0.0))
+        eng.submit(Request(1, prompt, max_new_tokens=2, temperature=0.0,
+                           share_with=0, shared_len=8))
+        with pytest.warns(DeprecationWarning, match="pairwise"):
+            res = eng.run()
+        assert res[0] == res[1]
+
+    def test_hundred_request_shared_system_prompt_dedupe(self, model, rng):
+        """The acceptance trace: 100 sequential requests with one
+        shared system prompt dedupe at > 0.9 token hit-rate, every page
+        accounted (no leaks), and the replayed trace prices the hits as
+        RowClone savings."""
+        from repro.serving.trace import replay_on_device
+        cfg, params = model
+        sys_prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                          prefix_cache=True, record_trace=True)
+        total = 0
+        for i in range(100):
+            eng.submit(Request(i, sys_prompt, max_new_tokens=1,
+                               temperature=0.0))
+            eng.run()
+            total += len(sys_prompt)
+        hit_rate = eng.stats["prefix_hit_tokens"] / total
+        assert hit_rate > 0.9, hit_rate
+        assert eng.stats["prefix_hits"] == 99
+        # zero leaked pages: live pages == tree-held pages, then none
+        assert eng.cache.pages_in_use == eng.cache.prefix.n_nodes == 2
+        eng.cache.clear_prefix()
+        assert eng.cache.pages_in_use == 0
+        rep = replay_on_device(eng.cache.trace)
+        assert rep["counts"]["prefix_hit"] == 99 * 2
+        assert rep["speedup"]["prefix"] > 5
+        assert rep["pim_ns"]["total"] < rep["cpu_ns"]["total"]
+
+    def test_lru_eviction_under_arena_pressure(self, model, rng):
+        """With the arena sized to the working set, cold committed
+        prefixes evict (LRU) instead of the allocator raising — and the
+        evicted pages zero through init-on-free before reuse."""
+        cfg, params = model
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=16,
+                          prefix_cache=True)
+        prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+                   for _ in range(12)]
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=1, temperature=0.0))
+            eng.run()                # each commits 2 pages into the tree
+        # 12 distinct 2-page prompts through a 16-page arena: the tree
+        # must have shed cold entries to keep allocating
+        assert eng.stats["prefix_evictions"] > 0
+        assert eng.cache.pages_in_use <= 16
+        assert eng.cache.pages_in_use == eng.cache.prefix.n_nodes
+        eng.cache.clear_prefix()
+        assert eng.cache.pages_in_use == 0
+        assert not np.asarray(eng.cache.k_arena).any()
+
+    def test_chunked_prefill_commits_and_hits(self, model, rng):
+        """Prefix flow under the chunked scheduler: a long prompt
+        committed chunk-by-chunk indexes on its LAST chunk, and a
+        later duplicate attaches every full page (the covered-sharer
+        no-write chunk path)."""
+        cfg, params = model
+        prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=64,
+                          max_prefill_chunk=8, prefix_cache=True)
+        eng.submit(Request(0, prompt, max_new_tokens=2, temperature=0.0))
+        res = eng.run()
+        assert eng.stats["prefix_hits"] == 0
+        eng.submit(Request(1, prompt, max_new_tokens=2, temperature=0.0))
+        res.update(eng.run())
+        assert res[0] == res[1]
+        assert eng.stats["prefix_hits"] == 1
+        assert eng.stats["prefix_hit_tokens"] == 20     # fully covered
+        assert eng.stats["decode_stall_rounds"] == 0

@@ -1,0 +1,227 @@
+"""Async serving front door: stream-vs-batch bit-identity (greedy and
+sampled), the open-loop Poisson smoke, starvation/fairness under
+mid-stream arrivals (extends the PR 5 ``decode_stall_rounds`` harness),
+SLO admission shedding, and the chunk auto-tuner.
+
+No pytest-asyncio: each test wraps its coroutine in ``asyncio.run``
+with a hard ``wait_for`` bound so a wedged server loop fails fast
+instead of hanging CI.
+"""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving.engine import PagedEngine, Request
+from repro.serving.server import AsyncServer, ChunkAutoTuner
+
+TIMEOUT_S = 300        # generous: first test in the process pays compiles
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, timeout=TIMEOUT_S))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["granite-3-8b"], num_layers=2)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("page_size", 4)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_prefill_chunk", 8)
+    return PagedEngine(cfg, params, **kw)
+
+
+class TestStreamParity:
+    def test_streams_bit_identical_to_batch_run(self, model, rng):
+        """The determinism contract: for the same request set, the
+        server's round-at-a-time loop streams exactly the tokens a
+        closed-loop ``engine.run()`` produces — greedy AND sampled.
+        Greedy is schedule-independent; sampled parity needs the
+        engine's per-round dispatch schedule replayed exactly, so the
+        backlog cap (which would defer one admission by a round) is
+        lifted for this comparison."""
+        cfg, _ = model
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (6, 18, 11, 6)]
+        temps = [0.0, 0.0, 0.8, 0.8]
+
+        ref = _engine(model, prefix_cache=True)
+        for i, (p, t) in enumerate(zip(prompts, temps)):
+            ref.submit(Request(i, p, max_new_tokens=6, temperature=t))
+        expected = ref.run()
+
+        async def go():
+            srv = AsyncServer(_engine(model, prefix_cache=True),
+                              admit_backlog_chunks=float("inf"))
+            async with srv:
+                streams = []
+                for i, (p, t) in enumerate(zip(prompts, temps)):
+                    streams.append(await srv.submit(
+                        p, max_new_tokens=6, temperature=t, req_id=i))
+                return [await s.drain() for s in streams], srv.stats
+
+        outs, stats = _run(go())
+        assert outs == [expected[i] for i in range(len(prompts))]
+        assert stats["completed"] == len(prompts)
+        assert stats["rejected"] == 0
+
+    def test_poisson_open_loop_matches_batch_engine(self, model, rng):
+        """Short Poisson trace (the CI smoke): whatever rounds the
+        arrivals landed in, greedy streams are bit-identical to the
+        batch engine on the same prompts, and every stream's timing
+        marks are complete."""
+        from repro.launch.serve_async import poisson_open_loop
+        cfg, _ = model
+        prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+                   for _ in range(6)]
+
+        async def go():
+            srv = AsyncServer(_engine(model))
+            async with srv:
+                return await poisson_open_loop(srv, prompts, rate_rps=200.0,
+                                               max_new_tokens=4)
+
+        res = _run(go())
+        assert res["completed"] == len(prompts) and res["rejected"] == 0
+
+        ref = _engine(model)
+        for i, p in enumerate(prompts):
+            ref.submit(Request(i, p, max_new_tokens=4, temperature=0.0))
+        expected = ref.run()
+        for s in res["streams"]:
+            assert s.tokens == expected[s.req_id]
+            assert s.ttft_ms is not None and s.e2e_ms is not None
+            assert len(s.token_ms) == len(s.tokens)
+            assert all(g >= 0 for g in s.itl_ms())
+
+    def test_stream_yields_incrementally(self, model, rng):
+        """``async for`` observes tokens one round at a time — the
+        stream ends exactly at the request budget."""
+        cfg, _ = model
+
+        async def go():
+            srv = AsyncServer(_engine(model))
+            async with srv:
+                s = await srv.submit(
+                    rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=5)
+                seen = []
+                async for tok in s:
+                    seen.append(tok)
+                    assert seen == s.tokens[:len(seen)]
+                return seen, s
+
+        seen, s = _run(go())
+        assert seen == s.tokens and len(seen) == 5
+
+
+class TestFairness:
+    def test_open_loop_long_prefill_never_stalls_decode(self, model, rng):
+        """PR 5's starvation harness, open-loop: a decoding request is
+        mid-stream when a 4-chunk prompt arrives.  The chunked
+        scheduler slices the newcomer's prefill across rounds, so the
+        incumbent keeps emitting every round — ``decode_stall_rounds``
+        stays 0 engine-side and ``max_round_gap`` stays 0 server-side.
+        """
+        cfg, _ = model
+        eng = _engine(model, max_prefill_chunk=8)
+
+        async def go():
+            srv = AsyncServer(eng)
+            async with srv:
+                short = await srv.submit(
+                    rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=12)
+                got = 0
+                async for _ in short:          # wait until it is decoding
+                    got += 1
+                    if got >= 2:
+                        break
+                long = await srv.submit(
+                    rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                    max_new_tokens=4)
+                return await short.drain(), await long.drain(), srv.stats
+
+        short_toks, long_toks, stats = _run(go())
+        assert len(short_toks) == 12 and len(long_toks) == 4
+        assert eng.stats["decode_stall_rounds"] == 0
+        assert stats["max_round_gap"] == 0
+
+
+class TestAdmission:
+    def test_infeasible_deadlines_shed_at_admission(self, model, rng):
+        """Once a round-time EWMA exists, a request whose first-token
+        or completion deadline cannot be met is rejected with an empty
+        stream instead of burning chunk budget."""
+        cfg, _ = model
+        prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+        async def go():
+            srv = AsyncServer(_engine(model))
+            async with srv:
+                warm = await srv.submit(prompt, max_new_tokens=2)
+                await warm.drain()             # establishes round_ms_ewma
+                assert srv.round_ms_ewma is not None
+                tight = await srv.submit(prompt, max_new_tokens=2,
+                                         ttft_slo_ms=0.0)
+                slow = await srv.submit(prompt, max_new_tokens=512,
+                                        deadline_ms=1e-3)
+                ok = await srv.submit(prompt, max_new_tokens=2)
+                return (await tight.drain(), tight, await slow.drain(),
+                        slow, await ok.drain(), srv.stats)
+
+        t_toks, tight, s_toks, slow, ok_toks, stats = _run(go())
+        assert tight.rejected and tight.reject_reason == "ttft_slo"
+        assert slow.rejected and slow.reject_reason == "deadline"
+        assert t_toks == [] and s_toks == []
+        assert len(ok_toks) == 2               # feasible traffic unaffected
+        assert stats["rejected"] == 2 and stats["completed"] == 2
+
+
+class TestChunkAutoTuner:
+    def test_requires_chunked_engine(self, model):
+        eng = _engine(model, max_prefill_chunk=None)
+        with pytest.raises(ValueError):
+            ChunkAutoTuner(eng, target_p99_ms=10.0)
+        with pytest.raises(ValueError):
+            eng.set_prefill_chunk(16)
+
+    def test_halves_over_target_doubles_under_with_backlog(self, model):
+        eng = _engine(model, max_prefill_chunk=64)
+        tuner = ChunkAutoTuner(eng, target_p99_ms=10.0, window=4,
+                               min_chunk=8, max_chunk=128)
+        for _ in range(4):                    # p99 over target -> halve
+            tuner.observe(100.0, decoded=True, backlog_tokens=0)
+        assert eng.max_prefill_chunk == 32
+        for _ in range(4):
+            tuner.observe(100.0, decoded=True, backlog_tokens=0)
+        assert eng.max_prefill_chunk == 16
+        # fast rounds but NO backlog: spare headroom is not spent
+        for _ in range(4):
+            tuner.observe(1.0, decoded=True, backlog_tokens=0)
+        assert eng.max_prefill_chunk == 16
+        # fast rounds with prefill backlogged -> double back up
+        for _ in range(4):
+            tuner.observe(1.0, decoded=True, backlog_tokens=1000)
+        assert eng.max_prefill_chunk == 32
+        # floor: over-target moves never go below min_chunk
+        for _ in range(12):
+            tuner.observe(100.0, decoded=True, backlog_tokens=0)
+        assert eng.max_prefill_chunk == 8
+        # prefill-only rounds are not decode-latency samples
+        before = len(tuner.history)
+        for _ in range(8):
+            tuner.observe(100.0, decoded=False, backlog_tokens=0)
+        assert len(tuner.history) == before
+        assert all(h["p99_ms"] > 0 for h in tuner.history)
