@@ -22,7 +22,8 @@ from .drange import DRangeTRNG, characterize
 from .isa import Instruction, Opcode
 from .memctrl import EndToEndCosts, MemoryController
 from .op_registry import (FACE_DEVICE, FACE_JAX, KVWriteBatch, PimOpSpec,
-                          get_op, ops_for_face, register_pim_op)
+                          get_op, ops_for_face, register_pim_op,
+                          unregister_pim_op)
 from .pim_queue import PimOpQueue
 from .pimolib import (Blocking, DeviceLib, OpReceipt, PimLib, TpuArena,
                       TpuLib, make_tpu_arena)

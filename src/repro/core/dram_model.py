@@ -44,7 +44,7 @@ class DRAMGeometry:
         return self.num_rows * self.row_bytes
 
 
-@dataclass
+@dataclass(frozen=True)
 class CellPhysics:
     """Per-cell activation-failure behaviour under violated tRCD.
 
@@ -53,6 +53,9 @@ class CellPhysics:
     characterization in D-RaNGe (Kim et al., HPCA'19): cells are
     overwhelmingly deterministic, with a sparse population of true-random
     cells whose behaviour is stable across time but spatially random.
+
+    Frozen: one ``CellPhysics`` may be shared by many devices, so it must
+    not carry mutable per-device state.
     """
 
     rng_cell_fraction: float = 0.004
@@ -70,12 +73,15 @@ class SimulatedDRAM:
 
     def __init__(
         self,
-        geometry: DRAMGeometry = DRAMGeometry(),
-        physics: CellPhysics = CellPhysics(),
+        geometry: Optional[DRAMGeometry] = None,
+        physics: Optional[CellPhysics] = None,
         seed: int = 0xD12A,
     ) -> None:
-        self.geometry = geometry
-        self.physics = physics
+        # Defaults are constructed per call: a single mutable default
+        # instance evaluated at def-time would alias state across every
+        # default-constructed device.
+        self.geometry = geometry = DRAMGeometry() if geometry is None else geometry
+        self.physics = physics = CellPhysics() if physics is None else physics
         self._rng = np.random.default_rng(seed)
 
         # Hidden row -> subarray map.  Real chips scramble row addresses;
@@ -87,6 +93,15 @@ class SimulatedDRAM:
 
         # Backing store, row-major.
         self._data = np.zeros((geometry.num_rows, geometry.row_bytes), np.uint8)
+
+        # Ambit B-group: designated compute rows per subarray, *outside*
+        # the addressable row space (the allocator can never hand them
+        # out).  Slots 0-2 are the triple-row-activation operands
+        # T0/T1/T2; slot 3 is the dual-contact-cell (DCC) row used for
+        # in-DRAM NOT.  See Seshadri et al., "Ambit" (MICRO'17).
+        self._bgroup = np.zeros(
+            (geometry.num_subarrays, 4, geometry.row_bytes), np.uint8
+        )
 
         # D-RaNGe cell physics: per-cell failure probability for the first
         # `drange_region_bytes` of each row (characterizing the whole device
@@ -142,6 +157,46 @@ class SimulatedDRAM:
         if self._row_to_subarray[src_row] != self._row_to_subarray[dst_row]:
             return False
         self._data[dst_row] = self._data[src_row]
+        return True
+
+    def ambit_bitwise(self, src_row: int, dst_row: int, op: str) -> bool:
+        """Ambit bulk AND/OR via triple-row activation (TRA).
+
+        The controller stages both operands and a control row into the
+        subarray's B-group (T0/T1/T2), simultaneously activates all three,
+        and charge sharing drives the bitlines to the *majority* of the
+        three cells: MAJ(a, b, 0) = a & b, MAJ(a, b, 1) = a | b.  The
+        result is copied back over ``dst_row`` (two-operand in-place
+        semantics: dst <- src OP dst).
+
+        Like RowClone, TRA only works over shared bitlines: returns False
+        (destination unchanged) when the rows sit in different subarrays.
+        """
+        if op not in ("and", "or"):
+            raise ValueError(f"unknown ambit bitwise op {op!r}")
+        sa = self._row_to_subarray[src_row]
+        if sa != self._row_to_subarray[dst_row]:
+            return False
+        t = self._bgroup[int(sa)]
+        t[0] = self._data[src_row]                    # AAP src -> T0
+        t[1] = self._data[dst_row]                    # AAP dst -> T1
+        t[2] = 0x00 if op == "and" else 0xFF          # AAP C0/C1 -> T2
+        maj = (t[0] & t[1]) | (t[0] & t[2]) | (t[1] & t[2])
+        t[0] = t[1] = t[2] = maj                      # TRA: all three rows
+        self._data[dst_row] = maj                     # AAP T0 -> dst
+        return True
+
+    def ambit_not(self, src_row: int, dst_row: int) -> bool:
+        """Ambit NOT via the dual-contact-cell (DCC) row: activating the
+        source row with the DCC's negated wordline couples the inverted
+        value into the DCC cell; copying the DCC row out yields ~src.
+        Same-subarray constraint applies (shared bitlines)."""
+        sa = self._row_to_subarray[src_row]
+        if sa != self._row_to_subarray[dst_row]:
+            return False
+        t = self._bgroup[int(sa)]
+        t[3] = ~self._data[src_row]                   # ACT src couples DCC
+        self._data[dst_row] = t[3]                    # AAP DCC -> dst
         return True
 
     def drange_read(self, row: int, n_bits: int, rng: Optional[np.random.Generator] = None) -> np.ndarray:

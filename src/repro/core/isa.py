@@ -26,6 +26,10 @@ class Opcode(enum.IntEnum):
                         # command sequence exists for it; the model face
                         # reports it unsupported and callers fall back to
                         # the CPU write path)
+    AMB_AND = 0x07      # Ambit AND: operand0=src row, operand1=dst row,
+                        # dst <- src & dst (TRA, same-subarray only)
+    AMB_OR = 0x08       # Ambit OR:  dst <- src | dst (TRA with C1 control row)
+    AMB_NOT = 0x09      # Ambit NOT: dst <- ~src (dual-contact-cell row)
 
 
 _OP_BITS = 28

@@ -42,7 +42,20 @@ class Cmd(enum.Enum):
     PRE = "PRE"
     RD = "RD"
     WR = "WR"
+    REF = "REF"
     NOP = "NOP"
+
+
+# Sentinel row ids for commands that do not target an addressable row:
+# REF targets the whole bank; the Ambit B-group rows (T0/T1/T2, the
+# dual-contact-cell row, and the C0/C1 control rows) live outside the
+# allocator-visible address space.
+ROW_REF = -1
+ROW_T0 = -2
+ROW_T1 = -3
+ROW_T2 = -4
+ROW_DCC = -5
+ROW_CTRL = -6
 
 
 @dataclass
@@ -61,6 +74,12 @@ class SequenceResult:
     commands: List[IssuedCmd]
     ok: bool = True
     data: Optional[np.ndarray] = None
+
+    def __post_init__(self) -> None:
+        # Device predicates return numpy truth values; callers compare
+        # ``ok`` with ``is True`` and JSON-serialize it, so normalize to
+        # a Python bool here.
+        self.ok = bool(self.ok)
 
 
 PimSequence = Callable[["MemoryController", int, int], SequenceResult]
@@ -82,14 +101,24 @@ class MemoryController:
         self.proto = proto
         self.now_ns: float = 0.0
         self.open_row: Optional[int] = None
+        # Bank state: when the most recent ACT was issued.  tRAS (ACT->PRE)
+        # and tRC (ACT->ACT) are enforced against this timestamp.
+        self._bank_act_ns: Optional[float] = None
+        # Refresh schedule: one REF is due every tREFI; the bank is busy
+        # for tRFC while it runs.
+        self.next_ref_ns: float = timings.tREFI
         self.trace: List[IssuedCmd] = []
         self._sequences: Dict[str, PimSequence] = {}
         self.stats: Dict[str, float] = {"commands": 0, "pim_ops": 0,
-                                        "pim_batches": 0}
+                                        "pim_batches": 0, "refreshes": 0}
 
-        # Built-in PiM extensions (the paper's two case studies).
+        # Built-in PiM extensions (the paper's two case studies, plus the
+        # Ambit bulk-bitwise triple).
         self.register_sequence("rowclone_copy", _seq_rowclone_copy)
         self.register_sequence("drange_read", _seq_drange_read)
+        self.register_sequence("ambit_and", _seq_ambit_and)
+        self.register_sequence("ambit_or", _seq_ambit_or)
+        self.register_sequence("ambit_not", _seq_ambit_not)
 
     # ------------------------------------------------------------------ #
     # Extension registry — the "60 additional lines of Verilog" analogue.
@@ -104,6 +133,7 @@ class MemoryController:
     def run_sequence(self, name: str, a: int, b: int) -> SequenceResult:
         if name not in self._sequences:
             raise KeyError(f"unknown PiM sequence {name!r}")
+        self._refresh_if_due()
         self.stats["pim_ops"] += 1
         return self._sequences[name](self, a, b)
 
@@ -124,8 +154,9 @@ class MemoryController:
         ok = True
         datas = []
         for a, b in pairs:
+            self._refresh_if_due()
             res = self._sequences[name](self, a, b)
-            ok &= res.ok
+            ok = bool(ok and res.ok)
             if res.data is not None:
                 datas.append(res.data)
         self.stats["pim_ops"] += len(pairs)
@@ -144,29 +175,63 @@ class MemoryController:
         self.stats["commands"] += 1
         if cmd is Cmd.ACT:
             self.open_row = row
+            self._bank_act_ns = self.now_ns
         elif cmd is Cmd.PRE:
             self.open_row = None
 
+    def _wait_until(self, t_ns: float) -> None:
+        """Stall (no command issued) until the bank-state clock reaches t_ns."""
+        if t_ns > self.now_ns:
+            self.now_ns = t_ns
+
+    def _refresh_if_due(self) -> None:
+        """Catch up on the refresh schedule: one REF every tREFI, bank
+        busy for tRFC.  Called between sequences / spec operations so PiM
+        command sequences themselves stay atomic (a real controller
+        defers REF across an in-flight sequence, then catches up)."""
+        while self.now_ns >= self.next_ref_ns:
+            if self.open_row is not None:
+                self.precharge()  # banks must be precharged before REF
+            self._issue(Cmd.REF, ROW_REF, self.t.tRFC, "refresh (tRFC busy)")
+            self.stats["refreshes"] += 1
+            self.next_ref_ns += self.t.tREFI
+
     # Standard (spec-compliant) operations ------------------------------ #
+    #
+    # Timing enforcement: ACT may not follow a previous ACT within tRC,
+    # PRE may not follow the row's ACT within tRAS, and column commands
+    # wait out tRCD.  A standard ACT -> PRE round-trip therefore takes
+    # exactly tRAS + tRP = tRC (48.75 ns for DDR3-800), not tRCD + tRP.
 
     def activate(self, row: int) -> None:
+        self._refresh_if_due()
         if self.open_row is not None:
-            self._issue(Cmd.PRE, self.open_row, self.t.tRP, "auto-close")
-        self._issue(Cmd.ACT, row, self.t.tRCD, "spec")
+            self.precharge()
+        if self._bank_act_ns is not None:
+            self._wait_until(self._bank_act_ns + self.t.tRC)
+        self._issue(Cmd.ACT, row, 0.0, "spec")
 
     def read_burst(self, row: int) -> None:
         if self.open_row != row:
             self.activate(row)
+        self._wait_until(self._bank_act_ns + self.t.tRCD)
         self._issue(Cmd.RD, row, self.t.tCL + self.t.tBL, "64B burst")
 
     def write_burst(self, row: int) -> None:
         if self.open_row != row:
             self.activate(row)
+        self._wait_until(self._bank_act_ns + self.t.tRCD)
         self._issue(Cmd.WR, row, self.t.tCWL + self.t.tBL, "64B burst")
 
     def precharge(self) -> None:
-        if self.open_row is not None:
-            self._issue(Cmd.PRE, self.open_row, self.t.tRP, "spec")
+        self._close_open_row("spec")
+
+    def _close_open_row(self, note: str = "spec") -> None:
+        if self.open_row is None:
+            return
+        if self._bank_act_ns is not None:
+            self._wait_until(self._bank_act_ns + self.t.tRAS)
+        self._issue(Cmd.PRE, self.open_row, self.t.tRP, note)
 
     # ------------------------------------------------------------------ #
     # Cost functions for CPU-side baselines (memcpy / calloc / CLFLUSH)
@@ -198,6 +263,23 @@ class MemoryController:
         """Invalidate destination-operand blocks (no writeback data)."""
         return (nbytes / self.proto.cacheline_bytes) * self.proto.clinval_ns_per_block
 
+    def bitwise_ns(self, nbytes: int) -> float:
+        """CPU bulk-bitwise baseline: read-modify-write loop (2 loads +
+        op + store per word; src read miss + dst RMW miss per line)."""
+        p = self.proto
+        words = nbytes / p.word_bytes
+        lines = nbytes / p.cacheline_bytes
+        cycles = words * p.bitwise_cycles_per_word + 2.0 * lines * p.miss_stall_cycles
+        return cycles * p.cycle_ns
+
+    def scan_ns(self, nbytes: int) -> float:
+        """CPU zero-compare baseline: load + compare + branch per word."""
+        p = self.proto
+        words = nbytes / p.word_bytes
+        lines = nbytes / p.cacheline_bytes
+        cycles = words * p.scan_cycles_per_word + lines * p.miss_stall_cycles
+        return cycles * p.cycle_ns
+
     def poc_handshake_ns(self) -> float:
         """pimolib register protocol: 2 MMIO stores (insn, Start) +
         2 MMIO polls (Ack, Fin) + syscall/library overhead."""
@@ -219,8 +301,7 @@ def _seq_rowclone_copy(mc: MemoryController, src: int, dst: int) -> SequenceResu
     """
     t0 = mc.now_ns
     cmds_start = len(mc.trace)
-    if mc.open_row is not None:
-        mc._issue(Cmd.PRE, mc.open_row, mc.t.tRP, "close before PiM")
+    mc._close_open_row("close before PiM")
     mc._issue(Cmd.ACT, src, 0.0, "rowclone ACT src")
     mc._issue(Cmd.PRE, src, mc.v.t1_act_pre, "violated tRAS")
     mc._issue(Cmd.ACT, dst, mc.v.t2_pre_act, "violated tRP")
@@ -231,12 +312,63 @@ def _seq_rowclone_copy(mc: MemoryController, src: int, dst: int) -> SequenceResu
     return SequenceResult(mc.now_ns - t0, mc.trace[cmds_start:], ok=ok)
 
 
+def _aap(mc: MemoryController, src: int, dst: int, note: str) -> None:
+    """Ambit AAP (ACT-ACT-PRE) primitive: a violated-timing row copy with
+    the same command train and cost as one RowClone (ACT -o- PRE -o- ACT,
+    then a spec restore+close of the destination)."""
+    mc._issue(Cmd.ACT, src, 0.0, f"{note} ACT")
+    mc._issue(Cmd.PRE, src, mc.v.t1_act_pre, f"{note} violated tRAS")
+    mc._issue(Cmd.ACT, dst, mc.v.t2_pre_act, f"{note} violated tRP")
+    mc._issue(Cmd.PRE, dst, mc.t.tRAS, f"{note} restore")
+    mc.now_ns += mc.t.tRP
+
+
+def _seq_ambit_bitwise(mc: MemoryController, src: int, dst: int,
+                       op: str) -> SequenceResult:
+    """Ambit AND/OR: stage operands + control row into the B-group with
+    three AAPs, one triple-row activation (TRA) for the majority compute,
+    then one AAP copying the result over dst (dst <- src OP dst)."""
+    t0 = mc.now_ns
+    cmds_start = len(mc.trace)
+    mc._close_open_row("close before PiM")
+    _aap(mc, src, ROW_T0, "ambit src->T0")
+    _aap(mc, dst, ROW_T1, "ambit dst->T1")
+    _aap(mc, ROW_CTRL, ROW_T2, f"ambit C{0 if op == 'and' else 1}->T2")
+    ok = mc.device.ambit_bitwise(src, dst, op)
+    # TRA: all three B-group wordlines raised at once; charge sharing
+    # settles to MAJ(T0, T1, T2), restored over a full spec tRAS.
+    mc._issue(Cmd.ACT, ROW_T0, 0.0, "ambit TRA T0/T1/T2")
+    mc._issue(Cmd.PRE, ROW_T0, mc.t.tRAS, "ambit TRA restore")
+    mc.now_ns += mc.t.tRP
+    _aap(mc, ROW_T0, dst, "ambit T0->dst")
+    return SequenceResult(mc.now_ns - t0, mc.trace[cmds_start:], ok=ok)
+
+
+def _seq_ambit_and(mc: MemoryController, src: int, dst: int) -> SequenceResult:
+    return _seq_ambit_bitwise(mc, src, dst, "and")
+
+
+def _seq_ambit_or(mc: MemoryController, src: int, dst: int) -> SequenceResult:
+    return _seq_ambit_bitwise(mc, src, dst, "or")
+
+
+def _seq_ambit_not(mc: MemoryController, src: int, dst: int) -> SequenceResult:
+    """Ambit NOT: activate src against the dual-contact cell (couples the
+    negated value into the DCC row), then AAP the DCC row over dst."""
+    t0 = mc.now_ns
+    cmds_start = len(mc.trace)
+    mc._close_open_row("close before PiM")
+    _aap(mc, src, ROW_DCC, "ambit src->DCC")
+    ok = mc.device.ambit_not(src, dst)
+    _aap(mc, ROW_DCC, dst, "ambit DCC->dst")
+    return SequenceResult(mc.now_ns - t0, mc.trace[cmds_start:], ok=ok)
+
+
 def _seq_drange_read(mc: MemoryController, row: int, n_bits: int) -> SequenceResult:
     """D-RaNGe: ACT with violated tRCD, immediate RD, sample metastable cells."""
     t0 = mc.now_ns
     cmds_start = len(mc.trace)
-    if mc.open_row is not None:
-        mc._issue(Cmd.PRE, mc.open_row, mc.t.tRP, "close before PiM")
+    mc._close_open_row("close before PiM")
     mc._issue(Cmd.ACT, row, 0.0, "drange ACT")
     mc._issue(Cmd.RD, row, mc.v.tRCD_viol, "violated tRCD read")
     bits = mc.device.drange_read(row, n_bits)
@@ -317,6 +449,40 @@ class EndToEndCosts:
             "init_coherence": cpu_init / self.rowclone_init_batched_ns(n, True),
         }
 
+    # Ambit bulk bitwise ------------------------------------------------ #
+
+    def cpu_bitwise_ns(self) -> float:
+        return self.mc.bitwise_ns(self.mc.proto.row_bytes)
+
+    def cpu_scan_ns(self) -> float:
+        return self.mc.scan_ns(self.mc.proto.row_bytes)
+
+    def ambit_bitwise_ns(self, op: str = "and", coherent: bool = False) -> float:
+        """One in-DRAM bitwise row op: POC handshake + the TRA command
+        sequence (4 AAPs + 1 TRA for AND/OR, 2 AAPs for NOT)."""
+        seq = _sequence_time_only(self.mc, f"ambit_{op}")
+        total = self.mc.poc_handshake_ns() + seq
+        if coherent:
+            # both operand rows may hold dirty cache lines
+            total += 2 * self.mc.clflush_ns(self.mc.proto.row_bytes)
+        return total
+
+    def ambit_bitwise_batched_ns(self, n: int, op: str = "and",
+                                 coherent: bool = False) -> float:
+        seq = _sequence_time_only(self.mc, f"ambit_{op}")
+        total = self.mc.poc_handshake_ns() + n * seq
+        if coherent:
+            total += 2 * n * self.mc.clflush_ns(self.mc.proto.row_bytes)
+        return total
+
+    def zero_scan_batched_ns(self, n: int) -> float:
+        """Zero-compare scan of n rows: OR-reduce the candidates into a
+        B-group scratch row (n ambit_or sequences, one handshake), then
+        one CPU pass over the single result row."""
+        seq = _sequence_time_only(self.mc, "ambit_or")
+        return (self.mc.poc_handshake_ns() + n * seq
+                + self.mc.scan_ns(self.mc.proto.row_bytes))
+
     # D-RaNGe ----------------------------------------------------------- #
 
     def drange_latency_ns(self) -> float:
@@ -330,6 +496,10 @@ class EndToEndCosts:
 def _sequence_time_only(mc: MemoryController, name: str) -> float:
     """Run a sequence on a scratch clock to get its isolated duration."""
     probe = MemoryController(mc.device, mc.t, mc.v, mc.proto)
-    # rows 0 -> 0 copy is a no-op data-wise; timing is row-independent.
+    # Rows 0 -> 0; timing is row-independent.  Most sequences are a data
+    # no-op on src == dst (copy, AND, OR), but e.g. ambit_not is not —
+    # restore the probe row so costing never perturbs device contents.
+    saved = mc.device.read_row(0)
     res = probe.run_sequence(name, 0, 0)
+    mc.device.write_row(0, saved)
     return res.elapsed_ns

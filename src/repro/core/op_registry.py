@@ -22,59 +22,65 @@ a spec does not implement are visible through :func:`supports`, so
 callers degrade gracefully (``KV_WRITE`` has no DDR3 command sequence;
 the model face accounts it as a CPU write instead).
 
-Worked example — registering "Ambit-AND" (an in-DRAM bitwise AND)
+Worked example — registering "Ambit-XOR" (an in-DRAM bitwise XOR)
 ---------------------------------------------------------------------
 
-The whole recipe, runnable (CI executes it via ``pytest
+The Ambit AND/OR/NOT triple graduated to built-in specs (``AMB_AND`` /
+``AMB_OR`` / ``AMB_NOT`` below) — this walkthrough registers the next
+op up, SIMDRAM-style XOR, and is runnable (CI executes it via ``pytest
 --doctest-modules``).  Pick an unused opcode value (add a real member to
 :class:`repro.core.isa.Opcode` when upstreaming; a plain int serves the
 demo), write a JAX-face flush executor, and register:
 
 >>> from repro.core.op_registry import (PimOpSpec, register_pim_op,
-...                                     get_op, supports)
->>> AMB_AND = 0x40                        # unused opcode value
->>> def _flush_and(q, arenas, ops):
+...                                     unregister_pim_op, get_op,
+...                                     supports)
+>>> AMB_XOR = 0x40                        # unused opcode value
+>>> def _flush_xor(q, arenas, ops):
 ...     # ONE coalesced launch for the whole pending batch (a real op
 ...     # dispatches its Pallas kernel over `arenas` here and returns
 ...     # the updated buffers)
-...     q._count_launch("page_and", 1)
+...     q._count_launch("page_xor", 1)
 ...     return arenas
 >>> _ = register_pim_op(PimOpSpec(
-...     opcode=AMB_AND, name="ambit_and",
-...     jax_kind="page_and", jax_flush=_flush_and))
+...     opcode=AMB_XOR, name="ambit_xor",
+...     jax_kind="page_xor", jax_flush=_flush_xor))
 
 Capability flags answer per face — no ``device_seq`` was given, so the
 model face reports the op unsupported and callers fall back gracefully:
 
->>> supports(AMB_AND, "jax"), supports(AMB_AND, "device")
+>>> supports(AMB_XOR, "jax"), supports(AMB_XOR, "device")
 (True, False)
->>> get_op(AMB_AND).name
-'ambit_and'
+>>> get_op(AMB_XOR).name
+'ambit_xor'
 
 Every :class:`repro.core.pim_queue.PimOpQueue` built after registration
 knows the new kind and coalesces it exactly like the built-ins:
 
 >>> from repro.core.pim_queue import PimOpQueue
 >>> q = PimOpQueue()
->>> q.enqueue("page_and", (3, 5)); q.enqueue("page_and", (4, 6))
+>>> q.enqueue("page_xor", (3, 5)); q.enqueue("page_xor", (4, 6))
 >>> _ = q.flush()                         # both ops, one launch
->>> q.launches_by_kind["page_and"], q.stats["ops_enqueued"]
+>>> q.launches_by_kind["page_xor"], q.stats["ops_enqueued"]
 (1, 2)
 
-A real op stays registered, of course — the demo tidies up so this
-example is re-runnable and later-built queues don't carry it:
+A real op stays registered, of course — the demo tidies up with the
+public inverse so this example is re-runnable and later-built queues
+don't carry it:
 
->>> from repro.core import op_registry as _reg
->>> del _reg._REGISTRY[AMB_AND]
+>>> unregister_pim_op(AMB_XOR).name
+'ambit_xor'
+>>> supports(AMB_XOR, "jax")
+False
 
 To light up the model face too, add two fields to the spec:
 ``device_seq`` naming the :class:`repro.core.memctrl.MemoryController`
 command sequence the POC runs when it decodes the opcode, and
 ``device_insns`` building the :class:`Instruction` batch a
 :class:`repro.core.pimolib.DeviceLib` call stages (see the built-in
-``RC_COPY`` spec at the bottom of this module for the shape).
-``examples/quickstart.py`` tours the resulting protocol end to end on
-both faces.
+``RC_COPY`` and ``AMB_AND`` specs at the bottom of this module for the
+shape).  ``examples/quickstart.py`` tours the resulting protocol end to
+end on both faces.
 """
 
 from __future__ import annotations
@@ -85,6 +91,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ambit import ops as amb_ops
 from repro.kernels.rowclone import ops as rc_ops
 
 from .isa import Instruction, Opcode
@@ -137,6 +144,15 @@ def register_pim_op(spec: PimOpSpec, *, override: bool = False) -> PimOpSpec:
     return spec
 
 
+def unregister_pim_op(opcode: Opcode) -> Optional[PimOpSpec]:
+    """Remove and return the spec registered for ``opcode`` (None if it
+    was not registered) — the public inverse of :func:`register_pim_op`
+    for tests, doctests, and plug-in teardown.  Queues built while the
+    op was live keep their kind registration (flushing an already-empty
+    kind is a no-op); queues built afterwards don't see it."""
+    return _REGISTRY.pop(opcode, None)
+
+
 def get_op(opcode: Opcode) -> Optional[PimOpSpec]:
     return _REGISTRY.get(opcode)
 
@@ -177,6 +193,14 @@ def _insns_rc_init(lib, src, dst) -> List[Instruction]:
     # the destination's subarray over each destination row.
     zero = lib.reserve_zero_row(dst.group)
     return [Instruction(Opcode.RC_INIT, zero, d) for d in dst.rows]
+
+
+def _make_insns_ambit(opcode: Opcode) -> Callable:
+    """Instruction builder for the two-operand Ambit ops
+    (operand0 = src row, operand1 = dst row; dst <- src OP dst)."""
+    def _build(lib, src, dst) -> List[Instruction]:
+        return [Instruction(opcode, s, d) for s, d in zip(src.rows, dst.rows)]
+    return _build
 
 
 def _poc_deposit_rng(poc, res) -> None:
@@ -241,6 +265,20 @@ def _flush_page_init(q, arenas, ops):
     return arenas
 
 
+def _make_flush_bitwise(op: str, kind: str) -> Callable:
+    """Flush executor for the Ambit bitwise kinds: one coalesced
+    layer-batched launch per arena for the whole pending (src, dst)
+    batch (dst <- src OP dst elementwise on bit patterns)."""
+    def _flush(q, arenas, ops):
+        src = jnp.asarray([s for s, _ in ops], jnp.int32)
+        dst = jnp.asarray([d for _, d in ops], jnp.int32)
+        arenas = tuple(amb_ops.pim_page_bitwise_batched(
+            a, src, dst, op=op, use_pallas=q.use_pallas) for a in arenas)
+        q._count_launch(kind, len(arenas))
+        return arenas
+    return _flush
+
+
 def _flush_kv_write(q, arenas, ops: List[KVWriteBatch]):
     assert len(arenas) == 2, "kv_write flushes a (k, v) arena pair"
     k_arena, v_arena = arenas
@@ -290,3 +328,22 @@ register_pim_op(PimOpSpec(
 register_pim_op(PimOpSpec(
     opcode=Opcode.KV_WRITE, name="kv_write",
     jax_kind="kv_write", jax_flush=_flush_kv_write))
+
+# Ambit bulk bitwise (Seshadri et al., MICRO'17).  Model face: TRA
+# command sequences against the B-group compute rows (same-subarray
+# constraint, like RowClone).  JAX face: layer-batched Pallas bitwise
+# kernels over arena pages.
+register_pim_op(PimOpSpec(
+    opcode=Opcode.AMB_AND, name="ambit_and",
+    device_seq="ambit_and", device_insns=_make_insns_ambit(Opcode.AMB_AND),
+    jax_kind="page_and", jax_flush=_make_flush_bitwise("and", "page_and")))
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.AMB_OR, name="ambit_or",
+    device_seq="ambit_or", device_insns=_make_insns_ambit(Opcode.AMB_OR),
+    jax_kind="page_or", jax_flush=_make_flush_bitwise("or", "page_or")))
+
+register_pim_op(PimOpSpec(
+    opcode=Opcode.AMB_NOT, name="ambit_not",
+    device_seq="ambit_not", device_insns=_make_insns_ambit(Opcode.AMB_NOT),
+    jax_kind="page_not", jax_flush=_make_flush_bitwise("not", "page_not")))

@@ -27,9 +27,11 @@ source of truth.
 
 Flush ordering is fixed and documented: ``page_copy`` ops land first
 (CoW source pages must be duplicated before anything overwrites them),
-then ``page_init`` (zeroing freed pages), then ``kv_write`` (fresh
-token KV).  Within a kind, op order follows enqueue order; duplicate
-destinations resolve to the last enqueued op.
+then ``page_init`` (zeroing freed pages), then the Ambit bitwise kinds
+(``page_and`` / ``page_or`` / ``page_not``, which read their operand
+pages in place), then ``kv_write`` (fresh token KV).  Within a kind, op
+order follows enqueue order; duplicate destinations resolve to the last
+enqueued op.
 
 Deferred clients that coalesce across calls use :meth:`admit` for
 hazard-aware admission: because the queue replays by *kind*, enqueueing
@@ -58,7 +60,8 @@ FlushFn = Callable[["PimOpQueue", Tuple[jax.Array, ...], list],
 class PimOpQueue:
     """Deferred queue of arena mutations, flushed as coalesced launches."""
 
-    KIND_ORDER = ("page_copy", "page_init", "kv_write")
+    KIND_ORDER = ("page_copy", "page_init",
+                  "page_and", "page_or", "page_not", "kv_write")
 
     def __init__(self, *, use_pallas: bool = False) -> None:
         self.use_pallas = use_pallas

@@ -117,6 +117,16 @@ class PimLib(abc.ABC):
     @abc.abstractmethod
     def flush(self, blocking: Blocking = Blocking.ACK) -> OpReceipt: ...
 
+    def bitwise(self, op: str, src: Allocation, dst: Allocation,
+                blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        """Ambit bulk bitwise: ``dst <- src OP dst`` for op in
+        {"and", "or"}, ``dst <- ~src`` for "not" (the two-operand
+        in-place semantics of AMB_AND/AMB_OR/AMB_NOT).  Concrete default
+        so third-party faces predating the op keep importing; both
+        built-in faces override it."""
+        raise NotImplementedError(
+            f"face {self.face!r} has no bitwise() implementation")
+
     @abc.abstractmethod
     def rand(self, n_bits: int, seed=None) -> Tuple[np.ndarray, OpReceipt]: ...
 
@@ -147,8 +157,8 @@ class DeviceLib(PimLib):
         self.coherence = CoherenceModel(coherence, poc.mc)
         self.trng = trng    # DRangeTRNG; required for rand()
         self.zero_rows: Dict[int, int] = {}  # group -> reserved all-zeros row
-        self.stats = {"copies": 0, "inits": 0, "reads": 0, "writes": 0,
-                      "rand_bits": 0}
+        self.stats = {"copies": 0, "inits": 0, "bitwises": 0, "reads": 0,
+                      "writes": 0, "rand_bits": 0}
 
     def supports(self, opcode: Opcode) -> bool:
         if opcode is Opcode.DR_GEN and self.trng is None:
@@ -254,6 +264,44 @@ class DeviceLib(PimLib):
                            write_back=False, coherence_on=dst)
         self.stats["inits"] += dst.nrows
         return rec
+
+    _BITWISE_OPC = {"and": Opcode.AMB_AND, "or": Opcode.AMB_OR,
+                    "not": Opcode.AMB_NOT}
+
+    def bitwise(self, op: str, src: Allocation, dst: Allocation,
+                blocking: Blocking = Blocking.ACK,
+                batch: bool = True) -> OpReceipt:
+        """Ambit ``dst <- src OP dst`` (or ``~src`` for "not") through
+        the POC: each row pair is priced as its TRA command sequence.
+        Operands must be same-subarray (the B-group compute rows are
+        per-subarray) — a cross-subarray pair makes the sequence report
+        ``ok=False`` rather than silently staging through the CPU."""
+        if op not in self._BITWISE_OPC:
+            raise ValueError(f"unknown bitwise op {op!r}")
+        if src.group != dst.group or src.nrows != dst.nrows:
+            raise ValueError(
+                "bitwise operands must be same-subarray, same size")
+        self.stats["bitwises"] += src.nrows
+        return self._run_op(self._BITWISE_OPC[op], src, dst, blocking, batch,
+                            write_back=True, coherence_on=src)
+
+    def cpu_bitwise(self, op: str, src: Allocation, dst: Allocation) -> OpReceipt:
+        """CPU read-modify-write baseline for the same op (the fallback
+        the serving-trace replay prices when operands span subarrays)."""
+        mc = self.poc.mc
+        nbytes = src.nrows * mc.proto.row_bytes
+        for s, d in zip(src.rows, dst.rows):
+            a = mc.device.read_row(s)
+            if op == "not":
+                out = np.bitwise_not(a)
+            elif op == "and":
+                out = a & mc.device.read_row(d)
+            else:
+                out = a | mc.device.read_row(d)
+            mc.device.write_row(d, out)
+        self.allocator.touch_cpu_write(dst)
+        return OpReceipt(True, "cpu_bitwise", face=self.face, n_ops=src.nrows,
+                         latency_ns=mc.bitwise_ns(nbytes))
 
     def rand(self, n_bits: int, seed=None) -> Tuple[np.ndarray, OpReceipt]:
         """Paper's rand_dram(): drain the POC random-number buffer.
@@ -422,8 +470,8 @@ class TpuLib(PimLib):
                 "each other's ops on the wrong arenas; share ONE lib across "
                 "clients for joint accounting instead")
         self.queue.owner = self
-        self.stats = {"copies": 0, "inits": 0, "reads": 0, "writes": 0,
-                      "rand_bits": 0}
+        self.stats = {"copies": 0, "inits": 0, "bitwises": 0, "reads": 0,
+                      "writes": 0, "rand_bits": 0}
         self._rand_ctr = 0   # advances the default rand() seed per call
         if arena is not None:
             self.buffers: List[jax.Array] = [arena.buffer]
@@ -534,6 +582,26 @@ class TpuLib(PimLib):
             self.queue.enqueue_init(d, value)
         self.stats["inits"] += dst.nrows
         return self._receipt("rowclone_init", dst.nrows, blocking)
+
+    _BITWISE_KIND = {"and": "page_and", "or": "page_or", "not": "page_not"}
+
+    def bitwise(self, op: str, src: Allocation, dst: Allocation,
+                blocking: Blocking = Blocking.ACK) -> OpReceipt:
+        """Ambit ``dst <- src OP dst`` (or ``~src`` for "not") on pages:
+        one coalesced bitwise launch per bound arena at flush.  The ops
+        both read and write dst, so ``admit`` registers src pages as
+        reads — a pending op that wrote either operand flushes first."""
+        kind = self._BITWISE_KIND.get(op)
+        if kind is None:
+            raise ValueError(f"unknown bitwise op {op!r}")
+        if src.group != dst.group or src.nrows != dst.nrows:
+            raise ValueError(
+                "bitwise operands must be same-slab, same size")
+        self.queue.admit(kind, dst.rows, self.flush, reads=src.rows)
+        for s, d in zip(src.rows, dst.rows):
+            self.queue.enqueue(kind, (s, d))
+        self.stats["bitwises"] += src.nrows
+        return self._receipt(f"ambit_{op}", src.nrows, blocking)
 
     def flush(self, blocking: Blocking = Blocking.ACK) -> OpReceipt:
         """Drain pending ops: one coalesced launch per op kind across

@@ -94,6 +94,10 @@ class PrototypeParams:
     memcpy_cycles_per_word: float = 2.5
     # memset/calloc zeroing loop, per 8-byte word (cycles)
     memset_cycles_per_word: float = 2.148
+    # bitwise read-modify-write loop (2 ld + op + sd), per word (cycles)
+    bitwise_cycles_per_word: float = 3.6
+    # zero-compare scan loop (ld + cmp + branch), per word (cycles)
+    scan_cycles_per_word: float = 2.25
     # additional CPU stall per cache miss (cycles @ 50 MHz)
     miss_stall_cycles: float = 4.5
     # MMIO register access to POC (cycles)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Ambit bitwise kernels.
+
+All functions expect an integer (bit-pattern) arena; the ops wrappers
+bitcast float arenas before dispatching here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_OPS = {"and": jnp.bitwise_and, "or": jnp.bitwise_or}
+
+
+def page_bitwise_batched(arena: jax.Array, src_pages: jax.Array,
+                         dst_pages: jax.Array, op: str) -> jax.Array:
+    """arena: (L, P, ...); dst <- src OP dst for each (src, dst) pair."""
+    fn = _OPS[op]
+    return arena.at[:, dst_pages].set(
+        fn(arena[:, src_pages], arena[:, dst_pages]))
+
+
+def page_not_batched(arena: jax.Array, src_pages: jax.Array,
+                     dst_pages: jax.Array) -> jax.Array:
+    return arena.at[:, dst_pages].set(~arena[:, src_pages])
+
+
+def page_zero_scan(arena: jax.Array, pages: jax.Array) -> jax.Array:
+    """Returns bool (n,): True where the page is all-zero bits across
+    every layer."""
+    sel = arena[:, pages]  # (L, n, ...)
+    axes = (0,) + tuple(range(2, sel.ndim))
+    return ~jnp.any(sel != 0, axis=axes)

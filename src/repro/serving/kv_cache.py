@@ -61,6 +61,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
 from repro.core.pimolib import PimLib, TpuLib
+from repro.kernels.ambit import ops as amb_ops
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.trace import PimTrace
 
@@ -78,7 +79,8 @@ class PagedKVCache:
                  page_size: int = 16, num_slabs: int = 4,
                  dtype=jnp.bfloat16, use_pallas: bool = False,
                  lib: Optional[PimLib] = None, record_trace: bool = False,
-                 mesh=None, prefix_cache: bool = False):
+                 mesh=None, prefix_cache: bool = False,
+                 zero_scan: bool = False):
         assert num_pages % num_slabs == 0
         hd = cfg.resolved_head_dim
         self.cfg = cfg
@@ -126,7 +128,15 @@ class PagedKVCache:
         self.page_alloc: Dict[int, object] = {}
         self.seqs: Dict[int, Sequence] = {}
         self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0,
-                      "prefix_hit_tokens": 0, "prefix_evictions": 0}
+                      "prefix_hit_tokens": 0, "prefix_evictions": 0,
+                      "init_skips_zero": 0, "zero_audit_pages": 0,
+                      "zero_audit_failures": 0}
+        # Ambit zero-compare paths (opt-in: the scans add read-only
+        # launches that per-round dispatch-count pins do not expect).
+        # _known_zero holds pages a scan verified all-zero, so their
+        # init-on-free can be skipped (zeros over zeros).
+        self.zero_scan = zero_scan
+        self._known_zero: set = set()
         # global radix prefix cache: committed full prompt pages index
         # into a trie (one node per token page), new prompts attach
         # their longest committed prefix automatically at create(...,
@@ -220,11 +230,20 @@ class PagedKVCache:
         """Drop a reference; on the last one, enqueue a batched
         RowClone-Init (zero without reading) and return the page to the
         allocator.  The caller flushes — `free()` zeroes a whole
-        sequence's pages in one launch."""
+        sequence's pages in one launch.  A page the zero-compare scan
+        just verified all-zero (reserved-but-never-written tails, fully
+        masked block rows) skips its init: the page already satisfies
+        the init-on-free invariant, so the skipped op is accounted as
+        saved work instead of launched work."""
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
-            self.queue.admit("page_init", (page,), self.lib.flush)
-            self.queue.enqueue_init(page)
+            if page in self._known_zero:
+                self._known_zero.discard(page)
+                self.queue.record_saved("page_init", 1)
+                self.stats["init_skips_zero"] += 1
+            else:
+                self.queue.admit("page_init", (page,), self.lib.flush)
+                self.queue.enqueue_init(page)
             self.stats["pages_zeroed"] += 1
             self.allocator.free(self.page_alloc.pop(page))
             del self.refcount[page]
@@ -232,6 +251,38 @@ class PagedKVCache:
     def flush_pending(self) -> None:
         """Drain the op queue: one coalesced launch per pending op kind."""
         self.lib.flush()
+
+    # --------------------- Ambit zero-compare scan --------------------- #
+
+    def enable_zero_scan(self) -> None:
+        """Turn on the Ambit zero-compare paths: ``free()`` scans a
+        dying sequence's exclusive pages (already-zero pages skip their
+        init-on-free) and ``clear_prefix()`` audits that every page it
+        freed really zeroed.  Off by default — the scans add read-only
+        launches that the per-round dispatch-count regressions pin."""
+        self.zero_scan = True
+
+    def scan_zero_pages(self, pages) -> np.ndarray:
+        """Batched in-arena zero-compare over ``pages``: ONE read-only
+        kernel launch per arena (k, v) regardless of batch size — the
+        TPU analogue of OR-reducing candidate rows into a B-group
+        scratch row and testing the result.  Flushes pending mutations
+        first so the scan sees committed state.  Returns bool (n,),
+        True where the page holds all-zero bits in BOTH arenas."""
+        idx = np.asarray(list(pages), np.int32)
+        if idx.size == 0:
+            return np.zeros((0,), bool)
+        self.flush_pending()
+        rows = jnp.asarray(idx)
+        flags = None
+        for buf in self.lib.buffers:
+            z = amb_ops.pim_page_zero_scan(buf, rows,
+                                           use_pallas=self.use_pallas)
+            flags = z if flags is None else (flags & z)
+        self.queue.count_external("page_zero_scan", len(self.lib.buffers))
+        if self.trace is not None:
+            self.trace.record_zero_scan(idx)
+        return np.asarray(flags)
 
     # ------------------------- sequence API ---------------------------- #
 
@@ -440,8 +491,18 @@ class PagedKVCache:
 
     def free(self, seq_id: int) -> None:
         """Release a sequence; all its dead pages zero in one batched
-        RowClone-Init launch per arena."""
+        RowClone-Init launch per arena.  With zero-scan enabled, the
+        sequence's exclusive pages are zero-compared first: pages that
+        are already all-zero (reserved-but-unwritten block tails) skip
+        their init — the scan is one launch per arena however many
+        pages die, and each skipped init is recorded as saved work."""
         seq = self.seqs.pop(seq_id)
+        if self.zero_scan:
+            excl = [p for p in seq.pages if self.refcount[p] == 1]
+            if excl:
+                flags = self.scan_zero_pages(excl)
+                self._known_zero.update(
+                    p for p, z in zip(excl, flags) if z)
         for p in seq.pages:
             self._release_page(p)
         self.flush_pending()
@@ -455,8 +516,20 @@ class PagedKVCache:
         of nodes evicted."""
         if self.prefix is None:
             return 0
+        before = set(self.refcount)
         n = self.prefix.evict_all()
         self.flush_pending()
+        if self.zero_scan:
+            # zero-leak audit: every page the teardown freed must now be
+            # all-zero bits in both arenas (the init-on-free invariant,
+            # verified in-arena instead of trusted).  Failures count —
+            # a nonzero audit means freed KV survived in HBM.
+            freed = sorted(before - set(self.refcount))
+            if freed:
+                flags = self.scan_zero_pages(freed)
+                self.stats["zero_audit_pages"] += len(freed)
+                self.stats["zero_audit_failures"] += int(
+                    len(freed) - int(np.count_nonzero(flags)))
         return n
 
     def _kv_tok_bytes(self) -> int:

@@ -44,8 +44,10 @@ class TraceEvent:
     """One coalesced batch of same-kind ops (one flush-side launch)."""
 
     kind: str                        # "page_copy" | "page_init" |
-                                     # "kv_write" | "prefix_hit"
-    src: Tuple[int, ...] = ()        # source pages (page_copy)
+                                     # "page_and" | "page_or" | "page_not" |
+                                     # "page_zero_scan" | "kv_write" |
+                                     # "prefix_hit"
+    src: Tuple[int, ...] = ()        # source pages (page_copy, bitwise)
     dst: Tuple[int, ...] = ()        # destination pages (all kinds)
     slots: Tuple[int, ...] = ()      # in-page slots (kv_write)
     value: float = 0.0               # fill value (page_init)
@@ -88,7 +90,9 @@ class PimTrace:
         """PimOpQueue flush hook: summarize one kind's pending ops into
         one event (mirrors the one-coalesced-launch-per-kind contract).
         Unknown kinds are ignored (ad-hoc per-queue registrations)."""
-        if kind == "page_copy":
+        if kind in ("page_copy", "page_and", "page_or", "page_not"):
+            # pairwise (src, dst) kinds: RowClone copies and the Ambit
+            # bitwise family share the op-record shape
             self.events.append(TraceEvent(
                 kind, src=tuple(s for s, _ in ops),
                 dst=tuple(d for _, d in ops)))
@@ -118,6 +122,16 @@ class PimTrace:
         self.events.append(TraceEvent("kv_write", dst=tuple(pages),
                                       slots=tuple(slots), nbytes=int(nbytes),
                                       rounds=int(rounds)))
+
+    def record_zero_scan(self, pages) -> None:
+        """The KV cache's zero-compare page scan (eviction candidates /
+        clear_prefix audit) bypasses the queue — it is a read-only
+        kernel, counted via ``count_external`` — so it records its page
+        batch explicitly.  Replay prices it as the Ambit OR-reduce-and-
+        test sequence vs a CPU word scan."""
+        if len(pages):
+            self.events.append(TraceEvent("page_zero_scan",
+                                          dst=tuple(int(p) for p in pages)))
 
     def record_prefix_hit(self, pages, nbytes: int = 0) -> None:
         """A radix prefix-cache hit attached ``pages`` to a new sequence
@@ -188,10 +202,13 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
 
     receipts: List[OpReceipt] = []
     pim = {"rowclone_copy": 0.0, "rowclone_init": 0.0,
+           "ambit_bitwise": 0.0, "zero_scan_ambit": 0.0,
            "cpu_fallback_copy": 0.0, "cpu_fallback_init": 0.0,
+           "cpu_fallback_bitwise": 0.0,
            "kv_write_cpu": 0.0, "prefix_hit_rowclone": 0.0}
-    cpu = {"memcpy": 0.0, "calloc": 0.0, "kv_write_cpu": 0.0,
-           "prefix_hit_memcpy": 0.0}
+    cpu = {"memcpy": 0.0, "calloc": 0.0, "bitwise": 0.0, "zero_scan": 0.0,
+           "kv_write_cpu": 0.0, "prefix_hit_memcpy": 0.0}
+    _BITWISE_OP = {"page_and": "and", "page_or": "or", "page_not": "not"}
 
     for ev in trace.events:
         if ev.kind == "page_copy":
@@ -213,6 +230,39 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
                 rec = lib.copy(src, dst, blocking=Blocking.FIN)
                 receipts.append(rec)
                 pim["rowclone_copy"] += rec.latency_ns
+        elif ev.kind in _BITWISE_OP:
+            # Ambit bitwise: TRA sequences where operands share a
+            # subarray, CPU read-modify-write fallback across subarrays
+            # — same shape as the page_copy pairing above.
+            op = _BITWISE_OP[ev.kind]
+            cpu["bitwise"] += ev.n * costs.cpu_bitwise_ns()
+            bw_pairs: Dict[int, List[Tuple[int, int]]] = {}
+            for s, d in zip(ev.src, ev.dst):
+                sa, da = row_of(s), row_of(d)
+                if sa.group == da.group:
+                    bw_pairs.setdefault(sa.group, []).append(
+                        (sa.rows[0], da.rows[0]))
+                else:
+                    rec = lib.cpu_bitwise(op, sa, da)
+                    receipts.append(rec)
+                    pim["cpu_fallback_bitwise"] += rec.latency_ns
+            for g, pairs in bw_pairs.items():
+                src = Allocation(rows=tuple(p[0] for p in pairs), group=g)
+                dst = Allocation(rows=tuple(p[1] for p in pairs), group=g)
+                rec = lib.bitwise(op, src, dst, blocking=Blocking.FIN)
+                receipts.append(rec)
+                pim["ambit_bitwise"] += rec.latency_ns
+        elif ev.kind == "page_zero_scan":
+            # Read-only scan: CPU pays a word-compare pass per page; the
+            # Ambit account OR-reduces the candidate rows into B-group
+            # scratch (one TRA sequence per page) and word-scans only the
+            # one result row.  Accounted analytically — the scan never
+            # mutates the arena, so there is no device state to replay.
+            cpu["zero_scan"] += ev.n * costs.cpu_scan_ns()
+            ns = costs.zero_scan_batched_ns(ev.n)
+            receipts.append(OpReceipt(True, "ambit_zero_scan", face=lib.face,
+                                      n_ops=ev.n, latency_ns=ns))
+            pim["zero_scan_ambit"] += ns
         elif ev.kind == "page_init":
             cpu["calloc"] += ev.n * costs.cpu_init_ns()
             byte_fill = (float(ev.value).is_integer()
@@ -262,14 +312,23 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
     # reflects what the workload actually achieved, fallbacks included
     copy_pim = pim["rowclone_copy"] + pim["cpu_fallback_copy"]
     init_pim = pim["rowclone_init"] + pim["cpu_fallback_init"]
+    bitwise_pim = pim["ambit_bitwise"] + pim["cpu_fallback_bitwise"]
     return {
         "counts": trace.counts(),
         "events": len(trace),
+        # the twin controller's own account: PiM sequences dispatched,
+        # refreshes the bank-state clock folded in (tREFI/tRFC), and the
+        # device-time the replay consumed — evidence the PiM totals ride
+        # the cycle-accurate face, not an analytic shortcut
+        "device_stats": dict(mc.stats, now_ns=mc.now_ns),
         "pim_ns": dict(pim, total=pim_total),
         "cpu_ns": dict(cpu, total=cpu_total),
         "speedup": {
             "copy": (cpu["memcpy"] / copy_pim) if copy_pim else None,
             "init": (cpu["calloc"] / init_pim) if init_pim else None,
+            "bitwise": (cpu["bitwise"] / bitwise_pim) if bitwise_pim else None,
+            "zero_scan": ((cpu["zero_scan"] / pim["zero_scan_ambit"])
+                          if pim["zero_scan_ambit"] else None),
             "prefix": ((cpu["prefix_hit_memcpy"] / pim["prefix_hit_rowclone"])
                        if pim["prefix_hit_rowclone"] else None),
             "end_to_end": (cpu_total / pim_total) if pim_total else None,

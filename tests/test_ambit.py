@@ -1,0 +1,453 @@
+"""Ambit in-DRAM bitwise ops on the cycle-accurate timing face, plus the
+memctrl timing-model bugfix pins.
+
+Covers: spec-path bank-state timing (tRAS before PRE, tRC between ACTs),
+periodic refresh accrual (tREFI/tRFC), Ambit TRA sequence timing and
+semantics on the model face (majority-of-three, same-subarray rejection),
+cross-face AND/OR/NOT parity through the PimLib protocol, Pallas-vs-ref
+kernel parity, the serving zero-compare consumer, replay pricing of the
+new trace kinds, and the satellite bugfixes (non-aliasing device
+defaults, frozen CellPhysics, SequenceResult.ok normalization, public
+unregister_pim_op)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Blocking, CellPhysics, DRAMGeometry, DeviceLib,
+                        MemoryController, Opcode, PimOpsController,
+                        SimulatedDRAM, TpuLib, allocator_from_subarray_map,
+                        discover_subarrays, make_tpu_arena)
+from repro.core import op_registry
+from repro.core.memctrl import Cmd, SequenceResult
+
+ROW_BYTES = 64
+
+
+def _mc(num_subarrays=2, rows=8):
+    return MemoryController(SimulatedDRAM(DRAMGeometry(
+        num_subarrays=num_subarrays, rows_per_subarray=rows,
+        row_bytes=ROW_BYTES)))
+
+
+def _same_sub_rows(mc, n):
+    """n rows sharing one physical subarray (the device shuffles its
+    row->subarray map, so hardcoded row ids are not same-subarray)."""
+    sub = mc.device._row_to_subarray
+    for sa in range(mc.device.geometry.num_subarrays):
+        rows = [r for r in range(len(sub)) if sub[r] == sa]
+        if len(rows) >= n:
+            return rows[:n]
+    raise AssertionError("no subarray large enough")
+
+
+def _cross_sub_pair(mc):
+    sub = mc.device._row_to_subarray
+    for r in range(1, len(sub)):
+        if sub[r] != sub[0]:
+            return 0, r
+    raise AssertionError("single-subarray device")
+
+
+def _device_lib() -> DeviceLib:
+    mc = _mc()
+    smap = discover_subarrays(mc, max_rows=16)
+    return DeviceLib(PimOpsController(mc), allocator_from_subarray_map(smap))
+
+
+def _jax_lib() -> TpuLib:
+    # uint8 pages so device rows and arena pages hold identical bytes
+    return TpuLib(make_tpu_arena(num_slabs=2, pages_per_slab=8,
+                                 page_elems=ROW_BYTES, dtype=jnp.uint8))
+
+
+class TestSpecPathTiming:
+    """Satellite 1: the spec path must respect tRAS and tRC — the old
+    model precharged immediately after ACT (a DRAM protocol violation
+    outside the deliberate PiM sequences)."""
+
+    def test_act_to_pre_is_tras_plus_trp(self):
+        mc = _mc()
+        t0 = mc.now_ns
+        mc.activate(0)
+        mc.precharge()
+        # ACT must hold the row open tRAS before PRE; PRE costs tRP:
+        # the corrected ACT->PRE round trip is exactly tRC = 48.75 ns
+        assert mc.now_ns - t0 == pytest.approx(mc.t.tRAS + mc.t.tRP)
+        assert mc.t.tRAS + mc.t.tRP == pytest.approx(48.75)
+
+    def test_act_to_act_respects_trc(self):
+        mc = _mc()
+        mc.activate(0)
+        t_act0 = next(c.at_ns for c in mc.trace if c.cmd is Cmd.ACT)
+        mc.activate(1)   # same bank: implicit PRE, then tRC from ACT 0
+        t_act1 = [c.at_ns for c in mc.trace if c.cmd is Cmd.ACT][-1]
+        assert t_act1 - t_act0 >= mc.t.tRAS + mc.t.tRP - 1e-9
+
+    def test_fresh_read_burst_total_unchanged(self):
+        # tRCD + tCL + tBL on a fresh activate: the paper-pinned read
+        # path must not shift under the bank-state rework
+        mc = _mc()
+        t0 = mc.now_ns
+        mc.read_burst(0)
+        assert mc.now_ns - t0 == pytest.approx(
+            mc.t.tRCD + mc.t.tCL + mc.t.tBL)
+
+    def test_pim_sequence_times_pinned(self):
+        # violated-timing sequences are the paper's contribution: pin
+        # rowclone (2 AAP-ish phases) and the Ambit TRA sequences
+        def seq_ns(name):
+            mc = _mc()
+            r0, r1 = _same_sub_rows(mc, 2)
+            res = mc.run_sequence(name, r0, r1)
+            assert res.ok
+            return res.elapsed_ns
+        assert seq_ns("rowclone_copy") == pytest.approx(53.75)
+        assert seq_ns("ambit_and") == pytest.approx(263.75)
+        assert seq_ns("ambit_or") == pytest.approx(263.75)
+        assert seq_ns("ambit_not") == pytest.approx(107.5)
+
+
+class TestRefresh:
+    """Satellite 2: periodic REF is part of the bank-state clock — a
+    span of N*tREFI must accrue N refreshes of tRFC busy time."""
+
+    def test_refresh_catchup_accrues_n_trfc(self):
+        mc = _mc()
+        n = 3
+        mc.now_ns = n * mc.t.tREFI + 1.0
+        r0, r1 = _same_sub_rows(mc, 2)
+        res = mc.run_sequence("rowclone_copy", r0, r1)
+        assert mc.stats["refreshes"] == n
+        refs = [c for c in mc.trace if c.cmd is Cmd.REF]
+        assert len(refs) == n
+        # each REF holds the device busy tRFC
+        gaps = [b.at_ns - a.at_ns for a, b in zip(refs, refs[1:])]
+        assert all(g == pytest.approx(mc.t.tRFC) for g in gaps)
+        # the PiM sequence itself still runs at its pinned time after
+        # the catch-up (refreshes land before the sequence dispatches)
+        assert res.ok
+
+    def test_no_refresh_inside_short_window(self):
+        mc = _mc()
+        r0, r1 = _same_sub_rows(mc, 2)
+        mc.run_sequence("rowclone_copy", r0, r1)
+        assert mc.stats["refreshes"] == 0
+
+    def test_batch_crossing_trefi_includes_ref_in_trace_window(self):
+        mc = _mc()
+        mc.now_ns = mc.t.tREFI - 10.0    # next pair crosses the boundary
+        rows = _same_sub_rows(mc, 4)
+        res = mc.run_sequence_batch(
+            "rowclone_copy", [(rows[0], rows[1]), (rows[2], rows[3])])
+        assert mc.stats["refreshes"] >= 1
+        assert res.ok and isinstance(res.ok, bool)
+        assert any(c.cmd is Cmd.REF for c in res.commands)
+
+
+class TestAmbitModelFace:
+    def test_and_or_not_semantics(self):
+        rng = np.random.default_rng(7)
+        a = rng.integers(0, 256, ROW_BYTES).astype(np.uint8)
+        b = rng.integers(0, 256, ROW_BYTES).astype(np.uint8)
+        for op, want in (("ambit_and", a & b), ("ambit_or", a | b),
+                         ("ambit_not", ~a)):
+            mc = _mc()
+            r0, r1 = _same_sub_rows(mc, 2)
+            mc.device.write_row(r0, a)
+            mc.device.write_row(r1, b)
+            res = mc.run_sequence(op, r0, r1)
+            assert res.ok
+            np.testing.assert_array_equal(mc.device.read_row(r1), want)
+            np.testing.assert_array_equal(mc.device.read_row(r0), a)
+
+    def test_cross_subarray_tra_rejected(self):
+        # operands in different subarrays cannot share B-group rows:
+        # the sequence reports ok=False and dst is untouched
+        mc = _mc(num_subarrays=2, rows=8)
+        src, dst = _cross_sub_pair(mc)
+        a = np.full(ROW_BYTES, 0xAA, np.uint8)
+        b = np.full(ROW_BYTES, 0x55, np.uint8)
+        mc.device.write_row(src, a)
+        mc.device.write_row(dst, b)
+        for op in ("ambit_and", "ambit_or", "ambit_not"):
+            res = mc.run_sequence(op, src, dst)
+            assert res.ok is False
+            np.testing.assert_array_equal(mc.device.read_row(dst), b)
+
+    def test_majority_of_three_is_the_primitive(self):
+        # AND/OR are MAJ with a control row: check MAJ directly through
+        # the device hook (charge-sharing truth table on bytes)
+        dev = SimulatedDRAM(DRAMGeometry(1, 4, 4))
+        a = np.array([0b1100, 0b1010, 0, 255], np.uint8)
+        b = np.array([0b1010, 0b1100, 255, 255], np.uint8)
+        dev.write_row(0, a)
+        dev.write_row(1, b)
+        assert dev.ambit_bitwise(0, 1, "and")
+        np.testing.assert_array_equal(dev.read_row(1), a & b)
+
+    def test_device_lib_bitwise_receipts_and_baseline(self):
+        lib = _device_lib()
+        g = lib.allocator.group_ids()[0]
+        src = lib.allocator.alloc(2, group=g)
+        dst = lib.allocator.alloc(2, group=g)
+        rng = np.random.default_rng(0)
+        va = rng.integers(0, 256, (2, ROW_BYTES)).astype(np.uint8)
+        vb = rng.integers(0, 256, (2, ROW_BYTES)).astype(np.uint8)
+        lib.write(src, va)
+        lib.write(dst, vb)
+        rec = lib.bitwise("and", src, dst, blocking=Blocking.FIN)
+        assert rec.ok and rec.op == "ambit_and" and rec.n_ops == 2
+        assert rec.latency_ns > 0
+        np.testing.assert_array_equal(lib.read(dst), va & vb)
+        assert lib.stats["bitwises"] == 2
+        # in-DRAM TRA beats the CPU read-modify-write loop end to end
+        cpu = lib.cpu_bitwise("and", src, dst)
+        assert cpu.latency_ns > 10 * rec.latency_ns
+        # allocation-level cross-group pairs are rejected up front
+        g2 = lib.allocator.group_ids()[1]
+        far = lib.allocator.alloc(2, group=g2)
+        with pytest.raises(ValueError):
+            lib.bitwise("or", src, far)
+        with pytest.raises(ValueError):
+            lib.bitwise("xor", src, dst)
+
+
+class TestCrossFaceParity:
+    def test_bitwise_parity_on_identical_traces(self):
+        rng = np.random.default_rng(11)
+        va = rng.integers(0, 256, (2, ROW_BYTES)).astype(np.uint8)
+        vb = rng.integers(0, 256, (2, ROW_BYTES)).astype(np.uint8)
+        for op, want_dst in (("and", va & vb), ("or", va | vb),
+                             ("not", (~va).astype(np.uint8))):
+            results = {}
+            for lib in (_device_lib(), _jax_lib()):
+                g = lib.allocator.group_ids()[0]
+                src = lib.allocator.alloc(2, group=g)
+                dst = lib.allocator.alloc(2, group=g)
+                lib.write(src, va)
+                lib.write(dst, vb)
+                rec = lib.bitwise(op, src, dst, blocking=Blocking.FIN)
+                assert rec.ok and rec.op == f"ambit_{op}"
+                results[lib.face] = (np.asarray(lib.read(src), np.uint8),
+                                     np.asarray(lib.read(dst), np.uint8))
+            for face, (got_src, got_dst) in results.items():
+                np.testing.assert_array_equal(got_dst, want_dst,
+                                              err_msg=f"{op} dst on {face}")
+                np.testing.assert_array_equal(got_src, va,
+                                              err_msg=f"{op} src on {face}")
+
+    def test_jax_face_coalesces_one_launch_per_kind(self):
+        lib = _jax_lib()
+        g = lib.allocator.group_ids()[0]
+        src = lib.allocator.alloc(3, group=g)
+        dst = lib.allocator.alloc(3, group=g)
+        rec = lib.bitwise("or", src, dst, blocking=Blocking.FIN)
+        assert rec.launches == 1
+        assert lib.queue.launches_by_kind["page_or"] == 1
+
+    def test_capability_flags(self):
+        dev, tpu = _device_lib(), _jax_lib()
+        for opc in (Opcode.AMB_AND, Opcode.AMB_OR, Opcode.AMB_NOT):
+            assert dev.supports(opc) and tpu.supports(opc)
+
+
+class TestAmbitKernels:
+    """Pallas (interpret-mode on CPU) vs pure-jnp reference parity."""
+
+    def test_bitwise_pallas_matches_ref(self):
+        # the arena arg is donated: pass a fresh copy per call and keep
+        # the reference values on the host
+        from repro.kernels.ambit import ops as amb_ops
+        rng = np.random.default_rng(3)
+        base = rng.integers(0, 256, (2, 8, 128)).astype(np.uint8)
+        src = jnp.asarray([0, 2, 5], jnp.int32)
+        dst = jnp.asarray([1, 3, 6], jnp.int32)
+        for op in ("and", "or", "not"):
+            ref = amb_ops.pim_page_bitwise_batched(
+                jnp.asarray(base), src, dst, op=op, use_pallas=False)
+            pal = amb_ops.pim_page_bitwise_batched(
+                jnp.asarray(base), src, dst, op=op, use_pallas=True,
+                interpret=True)
+            np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+    def test_bitwise_float_arena_bit_exact(self):
+        from repro.kernels.ambit import ops as amb_ops
+        rng = np.random.default_rng(4)
+        base = rng.normal(size=(2, 8, 32)).astype(np.float32)
+        src = jnp.asarray([0], jnp.int32)
+        dst = jnp.asarray([1], jnp.int32)
+        out = amb_ops.pim_page_bitwise_batched(jnp.asarray(base), src, dst,
+                                               op="and", use_pallas=False)
+        want = base[:, 0].view(np.uint32) & base[:, 1].view(np.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(out[:, 1]).view(np.uint32), want)
+
+    def test_zero_scan_pallas_matches_ref(self):
+        from repro.kernels.ambit import ops as amb_ops
+        arena = jnp.zeros((2, 8, 64), jnp.uint8)
+        arena = arena.at[1, 3, 17].set(1)        # one nonzero byte deep in
+        pages = jnp.asarray([0, 3, 5], jnp.int32)
+        ref = amb_ops.pim_page_zero_scan(arena, pages, use_pallas=False)
+        pal = amb_ops.pim_page_zero_scan(arena, pages, use_pallas=True,
+                                         interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+        np.testing.assert_array_equal(np.asarray(ref),
+                                      np.array([True, False, True]))
+
+    def test_zero_scan_bf16_arena(self):
+        from repro.kernels.ambit import ops as amb_ops
+        arena = jnp.zeros((1, 4, 16), jnp.bfloat16)
+        arena = arena.at[0, 2].set(0.5)
+        flags = amb_ops.pim_page_zero_scan(arena, jnp.asarray([1, 2]))
+        np.testing.assert_array_equal(np.asarray(flags),
+                                      np.array([True, False]))
+
+
+class TestSatelliteBugfixes:
+    def test_simulated_dram_defaults_do_not_alias(self):
+        """Satellite 3: dataclass instances used as shared mutable
+        defaults — every no-arg construction must get fresh objects."""
+        a, b = SimulatedDRAM(), SimulatedDRAM()
+        assert a.geometry is not b.geometry
+        assert a.physics is not b.physics
+
+    def test_cell_physics_frozen(self):
+        phys = SimulatedDRAM().physics
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            phys.retention_weak_fraction = 0.5
+
+    def test_sequence_result_ok_is_python_bool(self):
+        """Satellite 4: numpy array comparisons leak numpy.bool_ into
+        SequenceResult.ok; downstream `is True` checks and JSON dumps
+        need a Python bool."""
+        res = SequenceResult(1.0, [], ok=np.bool_(True))
+        assert type(res.ok) is bool
+        mc = _mc()
+        rows = _same_sub_rows(mc, 4)
+        batch = mc.run_sequence_batch(
+            "ambit_and", [(rows[0], rows[1]), (rows[2], rows[3])])
+        assert type(batch.ok) is bool and batch.ok
+        bad = mc.run_sequence_batch("ambit_and", [_cross_sub_pair(mc)])
+        assert type(bad.ok) is bool and not bad.ok
+
+    def test_unregister_pim_op_roundtrip(self):
+        """Satellite 5: registry teardown is public API now — register,
+        use, unregister, and the opcode is clean for re-registration."""
+        opcode = Opcode.NOP
+        assert op_registry.get_op(opcode) is None
+
+        def _flush(q, arenas, ops):
+            q._count_launch("tmp_kind", len(arenas))
+            return arenas
+        spec = op_registry.PimOpSpec(opcode=opcode, name="tmp",
+                                     jax_kind="tmp_kind", jax_flush=_flush)
+        op_registry.register_pim_op(spec)
+        assert op_registry.supports(opcode, op_registry.FACE_JAX)
+        assert op_registry.unregister_pim_op(opcode) is spec
+        assert op_registry.get_op(opcode) is None
+        assert not op_registry.supports(opcode, op_registry.FACE_JAX)
+        # idempotent: a second unregister returns None, no raise
+        assert op_registry.unregister_pim_op(opcode) is None
+        # the opcode is immediately re-registrable
+        op_registry.register_pim_op(spec)
+        assert op_registry.unregister_pim_op(opcode) is spec
+
+
+class TestServingZeroScan:
+    @pytest.fixture(scope="class")
+    def model(self):
+        from repro.configs import ARCHS, reduced
+        return reduced(ARCHS["granite-3-8b"], num_layers=2)
+
+    def test_scan_counts_and_skip_init_on_unwritten_pages(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cache = PagedKVCache(model, num_pages=32, page_size=4,
+                             zero_scan=True)
+        seq = cache.create(0, 2)           # one partial page
+        k = jnp.ones((cache.n_layers, 2, model.num_kv_heads,
+                      model.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        # reserve a block the sequence never writes: those pages stay
+        # all-zero and their init-on-free must be skipped by the scan
+        cache.reserve_tokens(cache.seqs[0], 9)
+        n_pages = len(cache.seqs[0].pages)
+        assert n_pages == 3                # 1 written + 2 reserved-zero
+        cache.free(0)
+        assert cache.stats["init_skips_zero"] == 2
+        assert cache.stats["pages_zeroed"] == n_pages
+        assert cache.queue.saved_by_kind.get("page_init") == 2
+        # ONE scan covered the whole free: one launch per arena (k, v)
+        assert cache.queue.launches_by_kind["page_zero_scan"] == 2
+        # the skipped pages really were zero; the written page zeroed
+        assert float(jnp.abs(cache.k_arena).sum()) == 0.0
+        assert cache.pages_in_use == 0
+
+    def test_default_off_no_scan_launches(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cache = PagedKVCache(model, num_pages=32, page_size=4)
+        seq = cache.create(0, 6)
+        cache.free(0)
+        assert cache.queue.launches_by_kind.get("page_zero_scan", 0) == 0
+        assert cache.stats["init_skips_zero"] == 0
+
+    def test_clear_prefix_zero_leak_audit(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        cache = PagedKVCache(model, num_pages=32, page_size=4,
+                             prefix_cache=True, zero_scan=True)
+        tokens = list(range(8))
+        seq = cache.create(0, 8, tokens=tokens)
+        k = jnp.ones((cache.n_layers, 8, model.num_kv_heads,
+                      model.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        cache.commit_prefix(0, tokens)
+        cache.free(0)                      # tree still holds the pages
+        assert cache.pages_in_use > 0
+        cache.clear_prefix()
+        assert cache.stats["zero_audit_pages"] > 0
+        assert cache.stats["zero_audit_failures"] == 0
+        assert cache.pages_in_use == 0
+
+    def test_scan_records_trace_and_replay_prices_it(self, model):
+        from repro.serving.kv_cache import PagedKVCache
+        from repro.serving.trace import replay_on_device
+        cache = PagedKVCache(model, num_pages=16, page_size=4, num_slabs=2,
+                             record_trace=True, zero_scan=True)
+        seq = cache.create(0, 6)
+        k = jnp.ones((cache.n_layers, 6, model.num_kv_heads,
+                      model.resolved_head_dim))
+        cache.write_prompt_kv(seq, k, k)
+        cache.free(0)
+        counts = cache.trace.counts()
+        assert counts["page_zero_scan"] == 2   # both pages scanned
+        rep = replay_on_device(cache.trace)
+        assert rep["pim_ns"]["zero_scan_ambit"] > 0
+        assert rep["speedup"]["zero_scan"] > 1
+        # the replay rode the timed face: device stats are surfaced
+        assert "refreshes" in rep["device_stats"]
+
+
+class TestTraceReplayBitwise:
+    def test_bitwise_events_price_as_tra_sequences(self):
+        from repro.serving.trace import PimTrace, replay_on_device
+        tr = PimTrace(num_pages=16, num_slabs=2, page_size=4)
+        tr.record_from_queue("page_and", [(0, 1), (2, 3)])
+        tr.record_from_queue("page_not", [(4, 5)])
+        rep = replay_on_device(tr)
+        assert rep["counts"] == {"page_and": 2, "page_not": 1}
+        assert rep["pim_ns"]["ambit_bitwise"] > 0
+        assert rep["speedup"]["bitwise"] > 10
+        assert all(r.ok for r in rep["receipts"])
+
+    def test_cross_slab_bitwise_falls_back_to_cpu(self):
+        from repro.serving.trace import PimTrace, replay_on_device
+        tr = PimTrace(num_pages=16, num_slabs=2, page_size=4)
+        tr.record_from_queue("page_or", [(0, 8)])   # slab 0 -> slab 1
+        rep = replay_on_device(tr)
+        assert rep["pim_ns"]["cpu_fallback_bitwise"] > 0
+        assert rep["pim_ns"]["ambit_bitwise"] == 0
+        # fallback latency stays in the denominator: speedup is 1x here
+        assert rep["speedup"]["bitwise"] == pytest.approx(1.0)

@@ -143,7 +143,8 @@ class TestOpRegistry:
             assert _jax_lib().supports(opcode)
             assert not _device_lib().supports(opcode)
         finally:
-            del op_registry._REGISTRY[opcode]
+            assert op_registry.unregister_pim_op(opcode) is spec
+        assert op_registry.get_op(opcode) is None
 
     def test_device_unsupported_op_raises(self):
         dev = _device_lib()
