@@ -56,6 +56,17 @@ to the TPU framework), eight tables:
    refresh, zero scans priced as Ambit TRA OR-reduce sequences):
    RowClone+Ambit vs all-CPU end-to-end totals.
 
+9. Paged hybrid serving (jamba-style: mamba + attention + MoE layers in
+   one stack): the paper-scale 100k-token-prompt scenario, clipped to
+   the CPU host, streams through the chunked scheduler while short
+   requests decode in flight.  Reports serving tokens/s, the decode
+   round's dispatch count (ONE ``fused_decode`` — the SSM state scatter
+   and MoE routing ride the same jit), and the recorded trace replayed
+   into state-arena RowClone savings: copy-on-fork rows as batched
+   RowClone copies, init-on-free rows as RowClone-Init, the
+   slot-granular ``SSM_STATE_WRITE`` stream priced as CPU traffic on
+   both accounts (the capability fallback the model face reports).
+
 Metrics print as ``name,us_per_call,derived`` CSV and the fusion numbers
 are also written to ``BENCH_serving.json`` so CI tracks them per PR.
 Pass ``--smoke`` for the CI-sized configuration.
@@ -414,6 +425,87 @@ def _ambit_table(cfg, params, *, smoke: bool) -> dict:
     }
 
 
+def _hybrid_long_prompt(rng, *, smoke: bool) -> dict:
+    """Table-9 scenario: a jamba-style hybrid stack (mamba + attention +
+    MoE sublayers, one paged state arena next to the KV pair) serves the
+    paper-scale long-prompt workload — ``long_len`` clipped from the
+    100k-token scenario to what the CPU host's naive-attention oracle
+    can sweep — chunked through the mixed scheduler while short requests
+    decode in flight.
+
+    Three numbers: serving tokens/s over the long prompt's lifetime, a
+    two-round pure-decode dispatch probe (the hybrid round must stay ONE
+    ``fused_decode``), and the recorded arena schedule replayed on the
+    DDR3 twin — a mid-flight fork/free probe puts copy-on-fork and
+    init-on-free state rows on the trace so the replay prices them as
+    RowClone traffic against the CPU row memcpy/calloc baseline."""
+    from repro.serving.trace import replay_on_device
+
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"], num_layers=4,
+                  attn_every=4)
+    params = init_params(T.model_defs(cfg), jax.random.PRNGKey(2))
+    chunk = 32 if smoke else 256          # multiples of ssm.chunk_size
+    long_len = 64 if smoke else 4096
+    n_decode = 2 if smoke else 3
+    decode_new = 8 if smoke else 24
+    num_pages = 64 if smoke else 768
+    eng = PagedEngine(cfg, params, page_size=8, num_pages=num_pages,
+                      max_prefill_chunk=chunk, record_trace=True)
+    # warmup request pays the fused decode/prefill/chunk/mixed traces
+    eng.submit(Request(10**6, rng.integers(0, cfg.vocab_size, 16)
+                       .astype(np.int32), max_new_tokens=4,
+                       temperature=0.0))
+    eng.run()
+    for i in range(n_decode):             # short requests mid-decode
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 16)
+                           .astype(np.int32), max_new_tokens=decode_new,
+                           temperature=0.0))
+    eng.run(max_rounds=2)
+    # dispatch probe: two pure-decode hybrid rounds
+    before = eng.cache.queue.snapshot()
+    eng.run(max_rounds=2)
+    probe = eng.cache.queue.delta(before)
+    # beam-fork probe: copy-on-fork + init-on-free state rows land on
+    # the trace (the replay prices them as RowClone vs CPU row memcpy)
+    live = sorted(eng.active)[0]
+    eng.cache.fork(live, 10**6 + 1)
+    eng.cache.free(10**6 + 1)
+    # the long hybrid prompt arrives; timed to completion
+    lid = 10**6 + 2
+    eng.submit(Request(lid, rng.integers(0, cfg.vocab_size, long_len)
+                       .astype(np.int32), max_new_tokens=decode_new,
+                       temperature=0.0))
+    base_tok = eng.stats["tokens_out"]
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = eng.stats["tokens_out"] - base_tok
+    rep = replay_on_device(eng.cache.trace)
+    return {
+        "config": {"long_len": long_len, "chunk": chunk,
+                   "n_decode": n_decode, "decode_new": decode_new},
+        "tok_s": round((toks + long_len) / dt if dt > 0
+                       else float("inf"), 2),
+        "decode_tokens": toks,
+        "prefill_chunks": eng.stats["prefill_chunks"],
+        "mixed_dispatches": eng.stats["mixed_dispatches"],
+        "dispatches_per_round": sum(probe.values()) / 2,
+        "probe_launches_by_kind": probe,
+        "state_stats": {"state_forks": eng.stats["state_forks"],
+                        "prefix_declined_ssm":
+                            eng.stats["prefix_declined_ssm"]},
+        "state_replay_ns": {
+            k: rep["pim_ns"][k] for k in
+            ("state_rowclone_copy", "state_rowclone_init",
+             "state_write_cpu")},
+        "state_replay_cpu_ns": {
+            k: rep["cpu_ns"][k] for k in
+            ("state_memcpy", "state_calloc", "state_write_cpu")},
+        "replay_speedup": {k: rep["speedup"][k] for k in
+                           ("state_copy", "state_init", "end_to_end")},
+    }
+
+
 def _mesh_row_local(world: int, compressed: bool, smoke: bool) -> dict:
     """Measure one (mesh, collective) cell IN THIS PROCESS — requires
     ``jax.device_count() >= world``.  Same shape as table 2: warmup
@@ -652,6 +744,19 @@ def main(out=sys.stdout, smoke: bool = False):
           f";end_to_end={e2e:.2f}x;zero_scan={zsc:.2f}x"
           f";refreshes={arows['device_stats']['refreshes']}", file=out)
 
+    # ---- table 9: jamba-style hybrid long-prompt serving --------------- #
+    hrows = _hybrid_long_prompt(rng, smoke=smoke)
+    print(f"hybrid_long_prompt,0,tok_s={hrows['tok_s']:.1f}"
+          f";long_len={hrows['config']['long_len']}"
+          f";dispatches_per_round={hrows['dispatches_per_round']:.1f}"
+          f";prefill_chunks={hrows['prefill_chunks']}", file=out)
+    hsp = hrows["replay_speedup"]
+    print(f"hybrid_state_replay,0,"
+          f"state_copy={(hsp['state_copy'] or float('nan')):.1f}x"
+          f";state_init={(hsp['state_init'] or float('nan')):.1f}x"
+          f";state_write_cpu_ns="
+          f"{hrows['state_replay_ns']['state_write_cpu']:.0f}", file=out)
+
     bench = {
         "config": {"arch": "granite-3-8b (reduced)", "smoke": smoke, **dec,
                    "prefill": pre},
@@ -695,6 +800,9 @@ def main(out=sys.stdout, smoke: bool = False):
         # table 8: Ambit zero-compare consumer + cycle-accurate replay
         # (tRAS-corrected + refresh-inclusive PiM totals vs all-CPU)
         "ambit_zero_scan": arows,
+        # table 9: jamba-style hybrid long-prompt serving — one dispatch
+        # per hybrid decode round, state-arena RowClone replay savings
+        "hybrid_serving": hrows,
     }
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     with open(path, "w") as f:

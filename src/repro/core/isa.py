@@ -30,6 +30,11 @@ class Opcode(enum.IntEnum):
                         # dst <- src & dst (TRA, same-subarray only)
     AMB_OR = 0x08       # Ambit OR:  dst <- src | dst (TRA with C1 control row)
     AMB_NOT = 0x09      # Ambit NOT: dst <- ~src (dual-contact-cell row)
+    SSM_STATE_WRITE = 0x0A  # slot-granular SSM recurrent-state scatter:
+                        # JAX-face only, like KV_WRITE (no DDR3 sequence;
+                        # the model face reports it unsupported and replay
+                        # prices it as CPU traffic).  State page copy/init
+                        # ride the existing RC_COPY/RC_INIT RowClone ops.
 
 
 _OP_BITS = 28

@@ -279,6 +279,31 @@ def _make_flush_bitwise(op: str, kind: str) -> Callable:
     return _flush
 
 
+@dataclass
+class StateWriteBatch:
+    """Pending SSM recurrent-state writes: full-depth conv + SSD state
+    for a batch of sequences, stacked as (groups, mamba_sublayers,
+    batch, ...) so enqueue/flush do O(1) host work in the batch size."""
+
+    rows: List[int]   # state-arena rows, one per batch entry
+    conv: jax.Array   # (G, M, B, conv_width-1, channels)
+    ssm: jax.Array    # (G, M, B, nheads, head_dim, state_dim)
+
+    @property
+    def n(self) -> int:
+        return len(self.rows)
+
+
+def _flush_ssm_state_write(q, arenas, ops: List[StateWriteBatch]):
+    """Registry default: SSM state lives in a dedicated state arena, not
+    the (k, v) arena pair a generic queue flushes — a serving cache
+    rebinds this kind to an arena-bound closure via
+    ``queue.register_kind`` (see serving.kv_cache.PagedStateArena)."""
+    raise RuntimeError(
+        "ssm_state_write ops were enqueued on a queue with no bound "
+        "state arena; rebind the kind via queue.register_kind(...)")
+
+
 def _flush_kv_write(q, arenas, ops: List[KVWriteBatch]):
     assert len(arenas) == 2, "kv_write flushes a (k, v) arena pair"
     k_arena, v_arena = arenas
@@ -328,6 +353,15 @@ register_pim_op(PimOpSpec(
 register_pim_op(PimOpSpec(
     opcode=Opcode.KV_WRITE, name="kv_write",
     jax_kind="kv_write", jax_flush=_flush_kv_write))
+
+# JAX-face only: the constant-size SSM recurrent-state scatter (paged
+# hybrid serving).  The default flush demands an arena-bound rebind, so
+# the registration here is mostly the capability flag: the model face
+# reports the op unsupported and DeviceLib callers fall back to the CPU
+# write path, exactly like KV_WRITE.
+register_pim_op(PimOpSpec(
+    opcode=Opcode.SSM_STATE_WRITE, name="ssm_state_write",
+    jax_kind="ssm_state_write", jax_flush=_flush_ssm_state_write))
 
 # Ambit bulk bitwise (Seshadri et al., MICRO'17).  Model face: TRA
 # command sequences against the B-group compute rows (same-subarray

@@ -1,0 +1,7 @@
+"""SSM state-arena kernels: the RowClone-style mutation family for
+paged recurrent state (constant-size per sequence, unlike KV pages).
+
+Triple layout mirrors ``kernels/rowclone``: ``ssm_scan.py`` holds the
+Pallas kernels, ``ref.py`` the pure-jnp references, ``ops.py`` the jit'd
+public wrappers the serving cache and op registry dispatch through.
+"""

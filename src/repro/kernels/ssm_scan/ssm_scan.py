@@ -1,0 +1,63 @@
+"""Pallas kernels for the SSM state arena.
+
+The state arena is the recurrent-state analogue of the KV arena: one
+constant-size row per live sequence, mutated in bulk once per decode
+round.  The scatter below is the ``SSM_STATE_WRITE`` launch target —
+``(layers, batch)`` grid, row coordinates scalar-prefetched so the
+output BlockSpec lands each block exactly on its row (no
+read-modify-write), arena aliased in/out so untouched rows never move.
+"layers" here is ``groups * mamba_sublayers``: the whole depth of the
+model writes in ONE launch, the same amortization argument as
+``rowclone.kv_scatter``.
+
+Row copy (copy-on-fork) and row init (init-on-free) do not get their own
+kernels: a state row IS a page of a ``(L, R, E)`` arena, so they ride the
+existing RowClone ``page_copy_batched`` / ``page_init_batched`` kernels
+(see ``ops.py``) — which is the point: fork and free traffic is RowClone
+traffic, priced as such on the model-face replay.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _state_scatter_kernel(row_idx_ref, new_ref, arena_ref, out_ref):
+    # Grid: (layers, batch).  The output BlockSpec lands this (1,1,E)
+    # block exactly on arena[l, rows[b]]; the body is a pure row write.
+    del row_idx_ref, arena_ref
+    out_ref[...] = new_ref[...].reshape(out_ref.shape)
+
+
+def state_scatter(arena: jax.Array, rows: jax.Array, new: jax.Array,
+                  *, interpret: bool = False) -> jax.Array:
+    """Scatter fresh state rows: ``arena[l, rows[b]] <- new[l, b]``.
+
+    arena: (layers, num_rows, elems); rows: (batch,) int32; new:
+    (layers, batch, elems).  One launch covers every sublayer's state
+    for every sequence in the round.  Duplicate rows are only valid with
+    identical payloads (last grid iteration wins).
+    """
+    layers, num_rows, elems = arena.shape
+    batch = rows.shape[0]
+    grid = (layers, batch)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, elems), lambda l, b, rw: (l, b, 0)),  # new
+            pl.BlockSpec(memory_space=pl.ANY),     # arena (aliased, unread)
+        ],
+        out_specs=pl.BlockSpec((1, 1, elems),
+                               lambda l, b, rw: (l, rw[b], 0)),
+    )
+    return pl.pallas_call(
+        _state_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},  # arena (after 1 prefetch + new) -> out
+        interpret=interpret,
+    )(rows.astype(jnp.int32), new.astype(arena.dtype), arena)

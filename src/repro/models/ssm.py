@@ -70,7 +70,7 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
     return out, new_state
 
 
-def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll=1):
+def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll=1, init=None):
     """Chunked SSD: one scan over chunks carrying the inter-chunk state.
 
     Per chunk the quadratic dual form runs on (Q, Q) tiles (MXU-sized);
@@ -78,6 +78,10 @@ def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll=1):
     instead of O(b*s*Q*h) tile residuals.
 
     x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative); B, C: (b, s, n).
+    ``init`` (b, h, p, n): carried inter-chunk state (zeros when None) —
+    a run split at chunk-multiple boundaries with the final state fed
+    back as ``init`` replays the exact same scan steps, so chunked
+    prefill stays bit-identical to a monolithic pass.
     Returns y: (b, s, h, p), final_state: (b, h, p, n).
     """
     b, s, h, p = x.shape
@@ -120,7 +124,10 @@ def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll=1):
         return new_state, y.astype(x.dtype)
 
     body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
-    init = jnp.zeros((b, h, p, n), jnp.float32)
+    if init is None:
+        init = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        init = init.astype(jnp.float32)
     final_state, ys = jax.lax.scan(body, init, (xq, dtq, Bq, Cq),
                                    unroll=unroll)
     y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * Q, h, p)[:, :s]
@@ -178,3 +185,60 @@ def ssm_layer(cfg: ModelConfig, pcfg: ParallelConfig, p: Dict[str, jax.Array],
                     p["out_norm"], cfg.norm_eps)
     out = jnp.einsum("bsk,kd->bsd", yflat, cast(p["out_proj"]))
     return shard(out, "batch", None, None), new_cache
+
+
+def ssm_layer_paged(cfg: ModelConfig, pcfg: ParallelConfig,
+                    p: Dict[str, jax.Array], x: jax.Array, *,
+                    lengths: jax.Array, conv_state: jax.Array,
+                    ssm_state: jax.Array):
+    """Length-masked Mamba-2 prefill over a padded batch with carried state
+    — the paged engine's fused-prefill/chunk entry point.
+
+    Positions >= lengths[b] contribute nothing to the recurrence: their
+    dt is zeroed after softplus, so decay is exp(0) = 1 and the input
+    term vanishes — the SSD scan carries each row's state through its
+    pad tail unchanged.  The new conv window is gathered at each row's
+    true tail rather than the padded end.  With zero carries and
+    lengths == s this computes the exact same float ops as
+    ``ssm_layer(mode="prefill")``; chunked callers must split at
+    multiples of ``cfg.ssm.chunk_size`` so the cross-call scan regroups
+    identically (the engine enforces this).
+
+    x: (b, s, d); lengths: (b,) valid token counts; conv_state:
+    (b, W-1, ch); ssm_state: (b, h, p, n).
+    Returns (out, (new_conv, new_state)).
+    """
+    s_cfg = cfg.ssm
+    y = jnp.einsum("bsd,dk->bsk", x, cast(p["in_proj"]))
+    y = shard(y, "batch", None, "ff")
+    z, xbc, dt, d_in, nheads = _split_in_proj(cfg, y)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    valid = jnp.arange(x.shape[1])[None, :] < lengths[:, None]     # (b,s)
+    dt = jnp.where(valid[:, :, None], dt, 0.0)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    W = s_cfg.conv_width
+    xbc_conv, _ = _causal_conv(xbc, cast(p["conv_w"]), p["conv_b"], conv_state)
+    # Conv window for the next call: the last W-1 *valid* inputs of each
+    # row.  Position t of the prompt sits at index t + (W-1) of the
+    # padded stream, so the window starts at lengths - (W-1) + (W-1).
+    xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    idx = lengths[:, None] + jnp.arange(W - 1)[None, :]            # (b,W-1)
+    new_conv = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    new_conv = new_conv.astype(conv_state.dtype)
+
+    xx, B, C = jnp.split(xbc_conv, [d_in, d_in + s_cfg.state_dim], axis=-1)
+    xh = xx.reshape(*xx.shape[:2], nheads, s_cfg.head_dim)
+    if pcfg.ssd_unroll:
+        ssd_unroll = pcfg.ssd_unroll
+    else:
+        ssd_unroll = True if pcfg.scan_unroll else 1
+    yh, final = _ssd_chunked(xh, dt, A, B, C, s_cfg.chunk_size,
+                             unroll=ssd_unroll, init=ssm_state)
+
+    yh = yh.astype(x.dtype) + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    yflat = yh.reshape(*yh.shape[:2], d_in)
+    yflat = rmsnorm(yflat * jax.nn.silu(z.astype(jnp.float32)).astype(yflat.dtype),
+                    p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", yflat, cast(p["out_proj"]))
+    return shard(out, "batch", None, None), (new_conv, final.astype(ssm_state.dtype))

@@ -139,6 +139,35 @@ quantization tolerance).  Token selection runs replicated from the full
 logits, so every shard picks the same token and the round's single
 host transfer is unchanged.  CPU dev boxes get a real multi-device
 mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+Hybrid layouts (SSM / MoE sublayers).  The engine serves every
+single-group decoder in the zoo — dense GQA, pure-SSM (mamba2), hybrid
+attention+Mamba+MoE (jamba), and non-MLA MoE — with per-layer-kind
+dispatch *inside* the existing ``lax.scan`` (:func:`_run_kinds`), so a
+hybrid decode round is still ONE compiled dispatch:
+
+* attention sublayers keep the paged KV arenas exactly as above;
+* Mamba sublayers carry per-sequence recurrent state in the cache's
+  :class:`~repro.serving.kv_cache.PagedStateArena` — constant-size rows
+  (no growth, no prefix sharing, copy-on-fork), gathered at the batch's
+  state rows and scattered back in-jit, so the fused steps add zero
+  launches (the scan's xs extend with the (conv, ssm) arenas and the
+  updated arenas ride out as stacked ys on donated buffers);
+* MoE sublayers route in-jit through the exact dense-fallback MoE
+  (``models.moe._dense_moe`` — per-token independent, jit-traceable),
+  so expert routing adds zero launches and the eager oracle stays
+  bit-identical;
+* the eager paths pay their state writes through the op queue's
+  ``ssm_state_write`` kind instead (the ``SSM_STATE_WRITE`` opcode's
+  JAX face): ONE coalesced state-scatter launch per arena per round,
+  constant in depth and batch, hazard-tracked against copy-on-fork.
+
+Chunked prefill over SSM layers must split prompts at multiples of
+``cfg.ssm.chunk_size`` — the SSD chunk scan regroups bit-identically
+only at chunk boundaries — so the engine requires
+``max_prefill_chunk % chunk_size == 0`` for state-arena families.
+MLA (latent-KV) and multi-group layouts still serve through the dense
+path; ``mesh=`` serving stays dense-only.
 """
 
 from __future__ import annotations
@@ -160,7 +189,9 @@ from repro.kernels.drange import ops as dr_ops
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.paged_attention import ops as pa_ops
 from repro.kernels.rowclone import ops as rc_ops
+from repro.models import moe as moe_mod
 from repro.models import params as P_mod
+from repro.models import ssm as ssm_mod
 from repro.models import transformer as T
 from repro.models.layers import (rmsnorm, cast, logits_out, embed, mlp,
                                  apply_rope, rope_sincos)
@@ -223,9 +254,24 @@ class PagedEngine:
                  lib=None, record_trace: bool = False,
                  mesh=None, compressed_collectives: bool = False,
                  prefix_cache: bool = False):
-        assert cfg.family in ("dense", "vlm"), "paged engine: GQA archs"
+        assert cfg.family in ("dense", "vlm", "ssm", "hybrid", "moe"), \
+            "paged engine: decoder-only GQA / SSM / hybrid / MoE archs"
+        if cfg.mla is not None:
+            raise ValueError(
+                "paged engine: MLA latent-KV attention is not paged — "
+                "deepseek-style archs serve through the dense path")
+        if len(T.layer_groups(cfg)) != 1:
+            raise ValueError(
+                "paged engine: single-group layouts only (leading dense "
+                "layers split the scan; set first_dense_layers=0)")
         self.cfg = cfg
         self.pcfg = pcfg or ParallelConfig(attention_impl="naive", remat="none")
+        # per-scan-step sublayer kinds — the hybrid dispatch plan every
+        # forward (fused scans AND the eager oracle) follows in lockstep
+        self._kinds = T.layer_groups(cfg)[0][1]
+        self._has_attn = "attn" in self._kinds
+        self._has_ssm = "mamba" in self._kinds
+        self._has_moe = "moe" in self._kinds
         # tensor-parallel sharded serving: fused steps become shard_map
         # programs over the mesh's `model` axis (see module docstring)
         self.mesh = mesh
@@ -235,6 +281,10 @@ class PagedEngine:
         self._param_specs = None
         self._arena_spec = None
         if mesh is not None:
+            if self._has_ssm or self._has_moe:
+                raise ValueError(
+                    "paged engine: mesh= serving is dense-only (SSM state "
+                    "arenas and in-jit MoE routing are host-local)")
             if "model" not in dict(mesh.shape):
                 raise ValueError("engine mesh needs a 'model' axis")
             n = mesh.shape["model"]
@@ -283,6 +333,13 @@ class PagedEngine:
         if max_prefill_chunk is not None and max_prefill_chunk < 1:
             raise ValueError("max_prefill_chunk must be >= 1 (or None to "
                              "disable chunked prefill)")
+        if (max_prefill_chunk is not None and self._has_ssm
+                and max_prefill_chunk % cfg.ssm.chunk_size != 0):
+            raise ValueError(
+                f"max_prefill_chunk={max_prefill_chunk} must be a multiple "
+                f"of cfg.ssm.chunk_size={cfg.ssm.chunk_size}: the SSD chunk "
+                "scan only regroups bit-identically when prompts split at "
+                "chunk-size boundaries")
         # chunked prefill: prompts longer than this are split into
         # chunk-sized pieces processed across successive rounds, decode
         # interleaved (None = monolithic: a prompt prefills whole)
@@ -313,7 +370,9 @@ class PagedEngine:
                       "multi_round_blocks": 0, "block_jit_traces": 0,
                       "mixed_dispatches": 0, "mixed_jit_traces": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefix_evictions": 0}
+                      "prefix_evictions": 0,
+                      "state_pages": 0, "state_forks": 0,
+                      "prefix_declined_ssm": 0}
         self._step = self._build_fused_step() if fused else None
         self._prefill_step = (self._build_fused_prefill_step()
                               if fused_prefill else None)
@@ -362,6 +421,11 @@ class PagedEngine:
                 "at construction")
         if n < 1:
             raise ValueError("max_prefill_chunk must be >= 1")
+        if self._has_ssm and n % self.cfg.ssm.chunk_size != 0:
+            raise ValueError(
+                f"max_prefill_chunk={n} must stay a multiple of "
+                f"cfg.ssm.chunk_size={self.cfg.ssm.chunk_size} (SSD "
+                "chunk-boundary bit-identity)")
         self.max_prefill_chunk = int(n)
 
     def step(self) -> Dict[int, List[int]]:
@@ -435,7 +499,8 @@ class PagedEngine:
     def _finish_done(self, results: Dict[int, List[int]]) -> None:
         # mirror the cache's prefix-sharing counters (engine.stats is
         # the one stats surface servers/benches read)
-        for key in ("prefix_hits", "prefix_hit_tokens", "prefix_evictions"):
+        for key in ("prefix_hits", "prefix_hit_tokens", "prefix_evictions",
+                    "state_pages", "state_forks", "prefix_declined_ssm"):
             self.stats[key] = self.cache.stats[key]
         for rid in list(self.active):
             r = self.active[rid]
@@ -469,11 +534,13 @@ class PagedEngine:
         one dispatch spanning every device.  Outputs are ``n_extra_out``
         replicated values (tokens — identical on every shard, the final
         logit reduce and sampling run replicated) followed by the two
-        sharded arenas.  ``check_rep=False``: the collectives guarantee
-        the replication the spec claims; jax's checker cannot see
-        through the masked gathers."""
+        sharded arenas and the (conv, ssm) state outputs — always None
+        under a mesh (the constructor rejects mesh+SSM), so their P()
+        specs map over zero leaves.  ``check_rep=False``: the
+        collectives guarantee the replication the spec claims; jax's
+        checker cannot see through the masked gathers."""
         out_specs = (P(),) * n_extra_out + (self._arena_spec,
-                                            self._arena_spec)
+                                            self._arena_spec, P(), P())
         return shard_map(fn, mesh=self.mesh,
                          in_specs=self._sharded_specs(n_args, arena_at),
                          out_specs=out_specs, check_rep=False)
@@ -497,16 +564,18 @@ class PagedEngine:
         eng = self
 
         def step(params, last, k_arena, v_arena, bt, lens, pages, slots,
-                 seed, temps):
+                 seed, temps, conv_arena, ssm_arena, srows):
             eng.stats["jit_traces"] += 1
             fn = functools.partial(_fused_decode_step, eng.cfg, eng.pcfg,
                                    **eng._step_kwargs())
             if eng.mesh is not None:
-                fn = eng._shard_wrap(fn, 10, (2, 3))
+                fn = eng._shard_wrap(fn, 13, (2, 3))
             return fn(params, last, k_arena, v_arena, bt, lens,
-                      pages, slots, seed, temps)
+                      pages, slots, seed, temps, conv_arena, ssm_arena,
+                      srows)
 
-        donate = (2, 3) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = ((2, 3, 10, 11) if jax.default_backend() in ("tpu", "gpu")
+                  else ())
         return jax.jit(step, donate_argnums=donate)
 
     def _build_fused_prefill_step(self):
@@ -518,17 +587,19 @@ class PagedEngine:
         eng = self
 
         def step(params, toks, lens, k_arena, v_arena, pages, slots, src,
-                 seed, temps, has_writes):
+                 seed, temps, conv_arena, ssm_arena, srows, has_writes):
             eng.stats["prefill_jit_traces"] += 1
             fn = functools.partial(_fused_prefill_step, eng.cfg, eng.pcfg,
                                    has_writes=has_writes,
                                    **eng._step_kwargs())
             if eng.mesh is not None:
-                fn = eng._shard_wrap(fn, 10, (3, 4))
+                fn = eng._shard_wrap(fn, 13, (3, 4))
             return fn(params, toks, lens, k_arena, v_arena,
-                      pages, slots, src, seed, temps)
+                      pages, slots, src, seed, temps, conv_arena,
+                      ssm_arena, srows)
 
-        donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = ((3, 4, 10, 11) if jax.default_backend() in ("tpu", "gpu")
+                  else ())
         return jax.jit(step, donate_argnums=donate,
                        static_argnames=("has_writes",))
 
@@ -541,17 +612,20 @@ class PagedEngine:
         eng = self
 
         def step(params, toks, lens, offs, k_arena, v_arena, bt, plens,
-                 pages, slots, src, seed, temps, has_writes):
+                 pages, slots, src, seed, temps, conv_arena, ssm_arena,
+                 srows, has_writes):
             eng.stats["prefill_jit_traces"] += 1
             fn = functools.partial(_fused_chunk_prefill_step, eng.cfg,
                                    eng.pcfg, has_writes=has_writes,
                                    **eng._step_kwargs())
             if eng.mesh is not None:
-                fn = eng._shard_wrap(fn, 13, (4, 5))
+                fn = eng._shard_wrap(fn, 16, (4, 5))
             return fn(params, toks, lens, offs, k_arena, v_arena, bt,
-                      plens, pages, slots, src, seed, temps)
+                      plens, pages, slots, src, seed, temps, conv_arena,
+                      ssm_arena, srows)
 
-        donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = ((4, 5, 13, 14) if jax.default_backend() in ("tpu", "gpu")
+                  else ())
         return jax.jit(step, donate_argnums=donate,
                        static_argnames=("has_writes",))
 
@@ -565,16 +639,19 @@ class PagedEngine:
         eng = self
 
         def step(params, last, steps, k_arena, v_arena, bt, lens, pages,
-                 slots, eos, seed, temps, rowmap):
+                 slots, eos, seed, temps, rowmap, conv_arena, ssm_arena,
+                 srows):
             eng.stats["block_jit_traces"] += 1
             fn = functools.partial(_fused_block_step, eng.cfg, eng.pcfg,
                                    **eng._step_kwargs())
             if eng.mesh is not None:
-                fn = eng._shard_wrap(fn, 13, (3, 4))
+                fn = eng._shard_wrap(fn, 16, (3, 4))
             return fn(params, last, steps, k_arena, v_arena, bt, lens,
-                      pages, slots, eos, seed, temps, rowmap)
+                      pages, slots, eos, seed, temps, rowmap, conv_arena,
+                      ssm_arena, srows)
 
-        donate = (3, 4) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = ((3, 4, 13, 14) if jax.default_backend() in ("tpu", "gpu")
+                  else ())
         return jax.jit(step, donate_argnums=donate)
 
     def _build_fused_mixed_step(self):
@@ -590,19 +667,22 @@ class PagedEngine:
         def step(params, c_toks, c_lens, c_offs, k_arena, v_arena, c_bt,
                  c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
                  d_last, d_bt, d_lens, d_pages, d_slots, d_seed, d_temps,
-                 d_from_chunk, has_writes):
+                 d_from_chunk, conv_arena, ssm_arena, c_srows, d_srows,
+                 has_writes):
             eng.stats["mixed_jit_traces"] += 1
             fn = functools.partial(_fused_mixed_step, eng.cfg, eng.pcfg,
                                    has_writes=has_writes,
                                    **eng._step_kwargs())
             if eng.mesh is not None:
-                fn = eng._shard_wrap(fn, 21, (4, 5), n_extra_out=2)
+                fn = eng._shard_wrap(fn, 25, (4, 5), n_extra_out=2)
             return fn(params, c_toks, c_lens, c_offs, k_arena, v_arena,
                       c_bt, c_plens, c_pages, c_slots, c_src, c_seed,
                       c_temps, d_last, d_bt, d_lens, d_pages, d_slots,
-                      d_seed, d_temps, d_from_chunk)
+                      d_seed, d_temps, d_from_chunk, conv_arena,
+                      ssm_arena, c_srows, d_srows)
 
-        donate = (4, 5) if jax.default_backend() in ("tpu", "gpu") else ()
+        donate = ((4, 5, 21, 22) if jax.default_backend() in ("tpu", "gpu")
+                  else ())
         return jax.jit(step, donate_argnums=donate,
                        static_argnames=("has_writes",))
 
@@ -795,7 +875,7 @@ class PagedEngine:
             "src": jnp.asarray(src, jnp.int32),
             "temps": jnp.asarray(temps),
             "plan_pages": pages[:n_valid], "plan_slots": slots[:n_valid],
-            "n_valid": n_valid,
+            "n_valid": n_valid, "rids": rids,
         }
 
     def _finish_chunks(self, batch: List[tuple],
@@ -833,17 +913,24 @@ class PagedEngine:
         # must land first
         self.cache.flush_pending()
         c = self._chunk_operands(batch, sc)
+        srows, conv, ssm = self._state_operands(c["rids"])
         self.rng_ctr += 1
         seed = self.rng_seed + jnp.uint32(self.rng_ctr)
-        tokens, k_arena, v_arena = self._chunk_step(
+        tokens, k_arena, v_arena, conv_a, ssm_a = self._chunk_step(
             self.params, c["toks"], c["lens"], c["offs"],
             self.cache.k_arena, self.cache.v_arena, c["bt"], c["plens"],
             c["pages"], c["slots"], c["src"], seed, c["temps"],
-            has_writes=c["n_valid"] > 0)
+            conv, ssm, srows,
+            has_writes=c["n_valid"] > 0 and self._has_attn)
         # chunk scatters account as the fused_prefill kind, same as the
         # monolithic batch (PimOpQueue.launches_by_kind, trace kv_writes)
-        self.cache.commit_fused_prefill(k_arena, v_arena, c["plan_pages"],
-                                        c["plan_slots"])
+        kv_plan = (c["plan_pages"], c["plan_slots"]) if self._has_attn \
+            else ([], [])
+        self.cache.commit_fused_prefill(k_arena, v_arena, *kv_plan)
+        if self._has_ssm:
+            self.cache.state.adopt(conv_a, ssm_a)
+            self.cache.state.record_fused_write(
+                [st.req.req_id for st, _ in batch])
         self.stats["prefill_chunks"] += len(batch)
         self.stats["fused_prefill_dispatches"] += 1
         return self._finish_chunks(batch, tokens)
@@ -897,20 +984,35 @@ class PagedEngine:
         d_slots = np.asarray([s.length % self.cache.page_size
                               for s in seqs], np.int32)
         d_bt, d_lens = self.cache.block_table([d_rids[i] for i in idx])
+        c_srows, conv, ssm = self._state_operands(c["rids"])
+        d_srows, _, _ = self._state_operands([d_rids[i] for i in idx])
         self.rng_ctr += 1
         c_seed = self.rng_seed + jnp.uint32(self.rng_ctr)
         self.rng_ctr += 1
         d_seed = self.rng_seed + jnp.uint32(self.rng_ctr)
-        c_tokens, d_tokens, k_arena, v_arena = self._mixed_step(
-            self.params, c["toks"], c["lens"], c["offs"],
-            self.cache.k_arena, self.cache.v_arena, c["bt"], c["plens"],
-            c["pages"], c["slots"], c["src"], c_seed, c["temps"],
-            jnp.asarray(d_last), d_bt, d_lens, jnp.asarray(d_pages),
-            jnp.asarray(d_slots), d_seed, jnp.asarray(d_temps),
-            jnp.asarray(d_from), has_writes=c["n_valid"] > 0)
-        self.cache.commit_fused_prefill(k_arena, v_arena, c["plan_pages"],
-                                        c["plan_slots"], kind=None)
-        self.cache.commit_fused_round(d_rids, k_arena, v_arena, kind=None)
+        c_tokens, d_tokens, k_arena, v_arena, conv_a, ssm_a = \
+            self._mixed_step(
+                self.params, c["toks"], c["lens"], c["offs"],
+                self.cache.k_arena, self.cache.v_arena, c["bt"],
+                c["plens"], c["pages"], c["slots"], c["src"], c_seed,
+                c["temps"], jnp.asarray(d_last), d_bt, d_lens,
+                jnp.asarray(d_pages), jnp.asarray(d_slots), d_seed,
+                jnp.asarray(d_temps), jnp.asarray(d_from), conv, ssm,
+                c_srows, d_srows,
+                has_writes=c["n_valid"] > 0 and self._has_attn)
+        kv_plan = (c["plan_pages"], c["plan_slots"]) if self._has_attn \
+            else ([], [])
+        self.cache.commit_fused_prefill(k_arena, v_arena, *kv_plan,
+                                        kind=None)
+        self.cache.commit_fused_round(d_rids, k_arena, v_arena, kind=None,
+                                      wrote_kv=self._has_attn)
+        if self._has_ssm:
+            self.cache.state.adopt(conv_a, ssm_a)
+            # trace both halves' state writes: the chunk rows' prefill
+            # state and the decode rows' round state (one fused launch)
+            self.cache.state.record_fused_write(
+                [st.req.req_id for st, _ in batch])
+            self.cache.state.record_fused_write(d_rids)
         # the whole round — chunk scatter included — was ONE launch
         self.cache.queue.count_external("fused_mixed")
         self.stats["prefill_chunks"] += len(batch)
@@ -976,16 +1078,22 @@ class PagedEngine:
         # (e.g. prefix-cache eviction inits from create-time pressure)
         # must land first
         self.cache.flush_pending()
+        srows, conv, ssm = self._state_operands(
+            [reqs[i].req_id for i in idx])
         self.rng_ctr += 1
         seed = self.rng_seed + jnp.uint32(self.rng_ctr)
-        tokens, k_arena, v_arena = self._prefill_step(
+        tokens, k_arena, v_arena, conv_a, ssm_a = self._prefill_step(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             self.cache.k_arena, self.cache.v_arena,
             jnp.asarray(pages, jnp.int32), jnp.asarray(slots, jnp.int32),
             jnp.asarray(src, jnp.int32), seed, jnp.asarray(temps),
-            has_writes=n_valid > 0)
-        self.cache.commit_fused_prefill(k_arena, v_arena, pages[:n_valid],
-                                        slots[:n_valid])
+            conv, ssm, srows, has_writes=n_valid > 0 and self._has_attn)
+        kv_plan = (pages[:n_valid], slots[:n_valid]) if self._has_attn \
+            else ([], [])
+        self.cache.commit_fused_prefill(k_arena, v_arena, *kv_plan)
+        if self._has_ssm:
+            self.cache.state.adopt(conv_a, ssm_a)
+            self.cache.state.record_fused_write([r.req_id for r in reqs])
         toks_np = np.asarray(tokens)[:B]    # the batch's one host transfer
         for i, r in enumerate(reqs):
             r.out_tokens.append(int(toks_np[i]))
@@ -1012,15 +1120,38 @@ class PagedEngine:
             cfg, self.pcfg, p, {"tokens": toks}, mode="prefill", cache=cache,
             lengths=jnp.asarray([max_len], jnp.int32))
         g = dense_cache["group0"]
-        # g: {i_attn: (k,v)} stacked (L, 1, S, kvh, hd)
-        for key, (k, v) in g.items():
+        # g: {i_attn: (k,v)} stacked (L, 1, S, kvh, hd) for attention
+        # sublayers; {i_mamba: (conv, ssm)} final recurrent state for
+        # SSM sublayers ((G, 1, W-1, ch) / (G, 1, h, p, n))
+        for key in (k for k in g if k.endswith("_attn")):
+            k, v = g[key]
             self.cache.write_prompt_kv(seq, k[:, 0][:, start:max_len],
                                        v[:, 0][:, start:max_len], start=start)
+        mamba_keys = sorted((k for k in g if k.endswith("_mamba")),
+                            key=lambda s: int(s.split("_")[0]))
+        if mamba_keys:
+            conv = jnp.stack([g[k][0] for k in mamba_keys], axis=1)
+            ssm = jnp.stack([g[k][1] for k in mamba_keys], axis=1)
+            st = self.cache.state
+            self.cache.queue.count_external(
+                "eager_ssm_layer", st.conv.shape[0] * st.conv.shape[1])
+            st.write([req.req_id], conv, ssm)
         tok = self._sample(logits[:, -1], req.temperature)
         req.out_tokens.append(int(tok[0]))
         self.active[req.req_id] = req
         self.stats["prefills"] += 1
         self.cache.commit_prefix(req.req_id, req.prompt)
+
+    def _state_operands(self, rids_padded: List[int]):
+        """The fused steps' state-arena operands for a (padded) row
+        list: (srows, conv, ssm) — or three ``None``s on a dense engine
+        (None is an empty pytree, so it threads through jit, donation,
+        scan xs, and shard_map specs with zero leaves)."""
+        if not self._has_ssm:
+            return None, None, None
+        st = self.cache.state
+        srows = jnp.asarray(st.rows_for(rids_padded), jnp.int32)
+        return srows, st.conv, st.ssm
 
     def _reserve_tails(self, rids: List[int]) -> None:
         """Reserve the incoming token's slot on every sequence in
@@ -1068,13 +1199,19 @@ class PagedEngine:
         slots = np.asarray([s.length % self.cache.page_size for s in seqs],
                            np.int32)
         bt, lens = self.cache.block_table([rids[i] for i in idx])
+        srows, conv, ssm = self._state_operands([rids[i] for i in idx])
         self.rng_ctr += 1
         seed = self.rng_seed + jnp.uint32(self.rng_ctr)
-        tokens, k_arena, v_arena = self._step(
+        tokens, k_arena, v_arena, conv_a, ssm_a = self._step(
             self.params, jnp.asarray(last), self.cache.k_arena,
             self.cache.v_arena, bt, lens, jnp.asarray(pages),
-            jnp.asarray(slots), seed, jnp.asarray(temps))
-        self.cache.commit_fused_round(rids, k_arena, v_arena)
+            jnp.asarray(slots), seed, jnp.asarray(temps), conv, ssm,
+            srows)
+        self.cache.commit_fused_round(rids, k_arena, v_arena,
+                                      wrote_kv=self._has_attn)
+        if self._has_ssm:
+            self.cache.state.adopt(conv_a, ssm_a)
+            self.cache.state.record_fused_write(rids)
         # per-engine count: the queue's fused_decode counter is global
         # to the (possibly shared) lib, this one is this engine's own
         self.stats["fused_dispatches"] += 1
@@ -1143,11 +1280,13 @@ class PagedEngine:
         # run would draw
         self.rng_ctr += K
         seed = self.rng_seed + jnp.uint32(self.rng_ctr - K + 1)
-        tokens, k_arena, v_arena = self._block_step(
+        srows, conv, ssm = self._state_operands([rids[i] for i in idx])
+        tokens, k_arena, v_arena, conv_a, ssm_a = self._block_step(
             self.params, jnp.asarray(last), jnp.asarray(steps_arr),
             self.cache.k_arena, self.cache.v_arena, bt, lens,
             jnp.asarray(pages), jnp.asarray(slots), jnp.asarray(eos),
-            seed, jnp.asarray(temps), jnp.asarray(idx, dtype=jnp.int32))
+            seed, jnp.asarray(temps), jnp.asarray(idx, dtype=jnp.int32),
+            conv, ssm, srows)
         toks_np = np.asarray(tokens)[:B]   # the block's ONE host transfer
         counts = []
         for i, r in enumerate(rids):
@@ -1165,7 +1304,11 @@ class PagedEngine:
             counts.append(n_i)
         consumed = max(counts)
         self.cache.commit_fused_block(rids, counts, k_arena, v_arena,
-                                      rounds=consumed)
+                                      rounds=consumed,
+                                      wrote_kv=self._has_attn)
+        if self._has_ssm:
+            self.cache.state.adopt(conv_a, ssm_a)
+            self.cache.state.record_fused_write(rids, rounds=consumed)
         self.stats["decode_rounds"] += consumed
         self.stats["tokens_out"] += sum(counts)
         self.stats["multi_round_blocks"] += 1
@@ -1176,18 +1319,36 @@ class PagedEngine:
         last = jnp.asarray([[self.active[r].out_tokens[-1]] for r in rids],
                            jnp.int32)
         bt, lens = self.cache.block_table(rids)
-        logits, k_new, v_new = _eager_decode_forward(
+        srows, conv_arena, ssm_arena = self._state_operands(rids)
+        logits, k_new, v_new, conv_new, ssm_new = _eager_decode_forward(
             self.cfg, self.pcfg, self.params, last, self.cache.k_arena,
             self.cache.v_arena, bt, lens, use_pallas=self.use_pallas,
-            interpret=self.interpret)
-        # account the per-layer jitted paged-attention dispatches (the
-        # O(num_layers) launches fusion removes) so fused-vs-eager
-        # dispatch comparisons measure the real gap
-        self.cache.queue.count_external("eager_attn_layer",
-                                        self.cache.n_layers)
-        # scatter the whole round's new KV (all layers, all sequences) in
-        # one coalesced launch per arena
-        self.cache.write_token_kv_batch(rids, k_new[:, :, 0], v_new[:, :, 0])
+            interpret=self.interpret, conv_arena=conv_arena,
+            ssm_arena=ssm_arena, srows=srows)
+        if self._has_attn:
+            # account the per-layer jitted paged-attention dispatches
+            # (the O(num_layers) launches fusion removes) so
+            # fused-vs-eager dispatch comparisons measure the real gap
+            self.cache.queue.count_external("eager_attn_layer",
+                                            self.cache.n_layers)
+            # scatter the whole round's new KV (all layers, all
+            # sequences) in one coalesced launch per arena
+            self.cache.write_token_kv_batch(rids, k_new[:, :, 0],
+                                            v_new[:, :, 0])
+        else:
+            # pure-SSM round: no KV write advances lengths, but the
+            # block tables / reserved pages still track token count
+            for r in rids:
+                self.cache.seqs[r].length += 1
+        if self._has_ssm:
+            st = self.cache.state
+            # per-layer eager SSM launches (what the fused scan removes)
+            self.cache.queue.count_external(
+                "eager_ssm_layer", st.conv.shape[0] * st.conv.shape[1])
+            # ONE coalesced ssm_state_write flush for the whole round —
+            # the SSM_STATE_WRITE opcode's JAX face, constant in depth
+            # and batch
+            st.write(rids, conv_new, ssm_new)
         temps = jnp.asarray([self.active[r].temperature for r in rids],
                             jnp.float32)
         self.rng_ctr += 1
@@ -1215,26 +1376,31 @@ class PagedEngine:
 
 
 def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
-                       pages, slots, seed, temps, *, use_pallas: bool,
+                       pages, slots, seed, temps, conv_arena=None,
+                       ssm_arena=None, srows=None, *, use_pallas: bool,
                        interpret: bool, axis: Optional[str] = None,
                        compressed: bool = False):
     """Forward (scan over layers) + KV scatter + token selection: the
     whole decode round as one compiled program over donated arenas.
+    SSM state scatters inside the forward's scan (zero extra launches);
+    a pure-SSM round (no attn sublayer) skips the KV scatter entirely.
     With ``axis`` (inside shard_map) the forward is tensor-parallel and
     the scatter writes each shard's local head slice."""
-    logits, k_new, v_new = _paged_decode_forward(
+    logits, k_new, v_new, conv_arena, ssm_arena = _paged_decode_forward(
         cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
         use_pallas=use_pallas, interpret=interpret, axis=axis,
-        compressed=compressed)
-    k_arena = rc_ops.kv_scatter_inline(
-        k_arena, pages, slots, k_new[:, :, 0].astype(k_arena.dtype),
-        use_pallas=use_pallas, interpret=interpret)
-    v_arena = rc_ops.kv_scatter_inline(
-        v_arena, pages, slots, v_new[:, :, 0].astype(v_arena.dtype),
-        use_pallas=use_pallas, interpret=interpret)
+        compressed=compressed, conv_arena=conv_arena,
+        ssm_arena=ssm_arena, srows=srows)
+    if k_new is not None:
+        k_arena = rc_ops.kv_scatter_inline(
+            k_arena, pages, slots, k_new[:, :, 0].astype(k_arena.dtype),
+            use_pallas=use_pallas, interpret=interpret)
+        v_arena = rc_ops.kv_scatter_inline(
+            v_arena, pages, slots, v_new[:, :, 0].astype(v_arena.dtype),
+            use_pallas=use_pallas, interpret=interpret)
     tokens = _select_tokens(logits[:, 0], temps, seed,
                             use_pallas=use_pallas, interpret=interpret)
-    return tokens, k_arena, v_arena
+    return tokens, k_arena, v_arena, conv_arena, ssm_arena
 
 
 # ---------------------------------------------------------------------- #
@@ -1243,7 +1409,8 @@ def _fused_decode_step(cfg, pcfg, params, last, k_arena, v_arena, bt, lens,
 
 
 def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
-                      lens, pages, slots, eos, seed, temps, rowmap, *,
+                      lens, pages, slots, eos, seed, temps, rowmap,
+                      conv_arena=None, ssm_arena=None, srows=None, *,
                       use_pallas: bool, interpret: bool,
                       axis: Optional[str] = None, compressed: bool = False):
     """Up to K decode rounds as ONE compiled program: a ``while_loop``
@@ -1262,6 +1429,9 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
     dead, so an all-EOS round costs no further forwards.  ``rowmap``
     folds pad rows onto row 0's sampled draw so duplicate scatter
     destinations always carry identical values, sampled or greedy.
+    SSM state arenas ride the carry; a dead row's in-scan state scatter
+    writes its current value back (``alive`` masking inside
+    :func:`_run_kinds`), the state analogue of the masked KV write-back.
     """
     K = pages.shape[1]
 
@@ -1270,11 +1440,13 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
         return (t < K) & jnp.any(alive)
 
     def body(carry):
-        t, alive, lens, last, toks, k_arena, v_arena = carry
-        logits, k_new, v_new = _paged_decode_forward(
+        (t, alive, lens, last, toks, k_arena, v_arena, conv_arena,
+         ssm_arena) = carry
+        logits, k_new, v_new, conv_arena, ssm_arena = _paged_decode_forward(
             cfg, pcfg, params, last[:, None], k_arena, v_arena, bt, lens,
             use_pallas=use_pallas, interpret=interpret, axis=axis,
-            compressed=compressed)
+            compressed=compressed, conv_arena=conv_arena,
+            ssm_arena=ssm_arena, srows=srows, alive=alive)
         p_t = jax.lax.dynamic_index_in_dim(pages, t, axis=1, keepdims=False)
         s_t = jax.lax.dynamic_index_in_dim(slots, t, axis=1, keepdims=False)
 
@@ -1286,8 +1458,9 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
                                             use_pallas=use_pallas,
                                             interpret=interpret)
 
-        k_arena = masked_scatter(k_arena, k_new[:, :, 0])
-        v_arena = masked_scatter(v_arena, v_new[:, :, 0])
+        if k_new is not None:
+            k_arena = masked_scatter(k_arena, k_new[:, :, 0])
+            v_arena = masked_scatter(v_arena, v_new[:, :, 0])
         raw = _select_tokens(logits[:, 0], temps,
                              seed + t.astype(jnp.uint32),
                              use_pallas=use_pallas, interpret=interpret,
@@ -1298,14 +1471,16 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
         last = jnp.where(alive, raw, last)
         hit_eos = alive & (eos >= 0) & (raw == eos)
         alive = alive & ((t + 1) < steps) & ~hit_eos
-        return t + 1, alive, lens, last, toks, k_arena, v_arena
+        return (t + 1, alive, lens, last, toks, k_arena, v_arena,
+                conv_arena, ssm_arena)
 
     Bp = last.shape[0]
     carry = (jnp.int32(0), steps > 0, lens, last,
-             jnp.full((Bp, K), -1, jnp.int32), k_arena, v_arena)
-    _, _, _, _, toks, k_arena, v_arena = jax.lax.while_loop(cond, body,
-                                                            carry)
-    return toks, k_arena, v_arena
+             jnp.full((Bp, K), -1, jnp.int32), k_arena, v_arena,
+             conv_arena, ssm_arena)
+    out = jax.lax.while_loop(cond, body, carry)
+    _, _, _, _, toks, k_arena, v_arena, conv_arena, ssm_arena = out
+    return toks, k_arena, v_arena, conv_arena, ssm_arena
 
 
 # ---------------------------------------------------------------------- #
@@ -1316,28 +1491,35 @@ def _fused_block_step(cfg, pcfg, params, last, steps, k_arena, v_arena, bt,
 def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
                       v_arena, c_bt, c_plens, c_pages, c_slots, c_src,
                       c_seed, c_temps, d_last, d_bt, d_lens, d_pages,
-                      d_slots, d_seed, d_temps, d_from_chunk, *,
-                      has_writes: bool, use_pallas: bool, interpret: bool,
-                      axis: Optional[str] = None, compressed: bool = False):
+                      d_slots, d_seed, d_temps, d_from_chunk,
+                      conv_arena=None, ssm_arena=None, c_srows=None,
+                      d_srows=None, *, has_writes: bool, use_pallas: bool,
+                      interpret: bool, axis: Optional[str] = None,
+                      compressed: bool = False):
     """A whole mixed round as one compiled program: the chunk half runs
     first (its scatter is traced before the decode forward, so a prompt
     finishing this round decodes against its own just-written KV — the
     data dependency that makes XLA sequence the halves correctly on
     donated arenas), then the decode half, whose input token for rows
     with ``d_from_chunk[j] >= 0`` comes from the chunk half's selection
-    instead of the host-supplied ``d_last``."""
-    c_tokens, k_arena, v_arena = _fused_chunk_prefill_step(
-        cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena, v_arena, c_bt,
-        c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
-        has_writes=has_writes, use_pallas=use_pallas, interpret=interpret,
-        axis=axis, compressed=compressed)
+    instead of the host-supplied ``d_last``.  The state arenas thread
+    chunk half -> decode half the same way: a prompt finishing this
+    round decodes from its own just-scattered recurrent state."""
+    c_tokens, k_arena, v_arena, conv_arena, ssm_arena = \
+        _fused_chunk_prefill_step(
+            cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena, v_arena,
+            c_bt, c_plens, c_pages, c_slots, c_src, c_seed, c_temps,
+            conv_arena, ssm_arena, c_srows, has_writes=has_writes,
+            use_pallas=use_pallas, interpret=interpret, axis=axis,
+            compressed=compressed)
     last = jnp.where(d_from_chunk >= 0,
                      c_tokens[jnp.clip(d_from_chunk, 0, None)], d_last)
-    d_tokens, k_arena, v_arena = _fused_decode_step(
+    d_tokens, k_arena, v_arena, conv_arena, ssm_arena = _fused_decode_step(
         cfg, pcfg, params, last[:, None], k_arena, v_arena, d_bt, d_lens,
-        d_pages, d_slots, d_seed, d_temps, use_pallas=use_pallas,
-        interpret=interpret, axis=axis, compressed=compressed)
-    return c_tokens, d_tokens, k_arena, v_arena
+        d_pages, d_slots, d_seed, d_temps, conv_arena, ssm_arena, d_srows,
+        use_pallas=use_pallas, interpret=interpret, axis=axis,
+        compressed=compressed)
+    return c_tokens, d_tokens, k_arena, v_arena, conv_arena, ssm_arena
 
 
 # ---------------------------------------------------------------------- #
@@ -1346,7 +1528,8 @@ def _fused_mixed_step(cfg, pcfg, params, c_toks, c_lens, c_offs, k_arena,
 
 
 def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
-                        pages, slots, src, seed, temps, *,
+                        pages, slots, src, seed, temps, conv_arena=None,
+                        ssm_arena=None, srows=None, *,
                         has_writes: bool, use_pallas: bool,
                         interpret: bool, axis: Optional[str] = None,
                         compressed: bool = False):
@@ -1358,35 +1541,38 @@ def _fused_prefill_step(cfg, pcfg, params, toks, lens, k_arena, v_arena,
     ``B*S`` flat entries): entry ``n`` writes the forward's stacked K/V
     at flat source index ``src[n]`` to ``arena[:, pages[n], slots[n]]``
     (pad entries duplicate entry 0 — identical writes, a deterministic
-    no-op).  ``has_writes=False`` (static: the all-shared-prefix batch)
-    skips the scatter entirely.
+    no-op).  ``has_writes=False`` (static: the all-shared-prefix batch,
+    or a pure-SSM engine with no KV to write) skips the scatter
+    entirely; SSM state scatters inside the forward's scan.
     """
-    logits, k_all, v_all = _prefill_forward(cfg, pcfg, params, toks, lens,
-                                            use_pallas=use_pallas,
-                                            interpret=interpret, axis=axis,
-                                            compressed=compressed)
-    L = k_all.shape[0]
+    logits, k_all, v_all, conv_arena, ssm_arena = _prefill_forward(
+        cfg, pcfg, params, toks, lens, use_pallas=use_pallas,
+        interpret=interpret, axis=axis, compressed=compressed,
+        conv_arena=conv_arena, ssm_arena=ssm_arena, srows=srows)
     Bp, Sp = toks.shape
 
     def scatter(arena, new_all):
+        L = new_all.shape[0]
         flat = new_all.reshape((L, Bp * Sp) + new_all.shape[3:])[:, src]
         return rc_ops.kv_scatter_inline(arena, pages, slots,
                                         flat.astype(arena.dtype),
                                         use_pallas=use_pallas,
                                         interpret=interpret)
 
-    if has_writes:
+    if has_writes and k_all is not None:
         k_arena = scatter(k_arena, k_all)
         v_arena = scatter(v_arena, v_all)
     tokens = _select_tokens(logits, temps, seed, use_pallas=use_pallas,
                             interpret=interpret)
-    return tokens, k_arena, v_arena
+    return tokens, k_arena, v_arena, conv_arena, ssm_arena
 
 
 def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
                               v_arena, bt, plens, pages, slots, src, seed,
-                              temps, *, has_writes: bool, use_pallas: bool,
-                              interpret: bool, axis: Optional[str] = None,
+                              temps, conv_arena=None, ssm_arena=None,
+                              srows=None, *, has_writes: bool,
+                              use_pallas: bool, interpret: bool,
+                              axis: Optional[str] = None,
                               compressed: bool = False):
     """Chunk forward (prefix-KV attention over committed arena pages) +
     in-jit chunk-KV scatter + token selection: one prefill chunk batch
@@ -1400,33 +1586,35 @@ def _fused_chunk_prefill_step(cfg, pcfg, params, toks, lens, offs, k_arena,
     scatter is traced *after* the forward's arena reads, so XLA orders
     the prefix gather before the in-place update on donated buffers.
     """
-    logits, k_all, v_all = _chunk_prefill_forward(
+    logits, k_all, v_all, conv_arena, ssm_arena = _chunk_prefill_forward(
         cfg, pcfg, params, toks, lens, offs, k_arena, v_arena, bt, plens,
         use_pallas=use_pallas, interpret=interpret, axis=axis,
-        compressed=compressed)
-    L = k_all.shape[0]
+        compressed=compressed, conv_arena=conv_arena,
+        ssm_arena=ssm_arena, srows=srows)
     Bp, Sp = toks.shape
 
     def scatter(arena, new_all):
+        L = new_all.shape[0]
         flat = new_all.reshape((L, Bp * Sp) + new_all.shape[3:])[:, src]
         return rc_ops.kv_scatter_inline(arena, pages, slots,
                                         flat.astype(arena.dtype),
                                         use_pallas=use_pallas,
                                         interpret=interpret)
 
-    if has_writes:
+    if has_writes and k_all is not None:
         k_arena = scatter(k_arena, k_all)
         v_arena = scatter(v_arena, v_all)
     tokens = _select_tokens(logits, temps, seed, use_pallas=use_pallas,
                             interpret=interpret)
-    return tokens, k_arena, v_arena
+    return tokens, k_arena, v_arena, conv_arena, ssm_arena
 
 
 def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
                            k_arena, v_arena, bt, plens, *,
                            use_pallas: bool = False, interpret: bool = True,
                            axis: Optional[str] = None,
-                           compressed: bool = False):
+                           compressed: bool = False, conv_arena=None,
+                           ssm_arena=None, srows=None):
     """Batched forward over one prefill *chunk* per row: ``lax.scan``
     over the stacked layer params AND the per-layer arena slices, with
     prefix-KV flash attention — each row's queries attend causally over
@@ -1448,9 +1636,15 @@ def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
         jnp.arange(S, dtype=jnp.int32), (B, S))
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
+    has_attn = "attn" in kinds
+    has_ssm = conv_arena is not None
 
     def body(x, xs):
-        p_layer, k_l, v_l = xs           # k_l: (pages, ps, kvh, hd)
+        if has_ssm:
+            p_layer, k_l, v_l, conv_l, ssm_l = xs
+        else:
+            p_layer, k_l, v_l = xs       # k_l: (pages, ps, kvh, hd)
+            conv_l = ssm_l = None
 
         def attend(q, k, v):
             # gather this layer's committed prefix: (B, W*ps, kvh, hd)
@@ -1464,37 +1658,51 @@ def _chunk_prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, offs,
                 use_pallas=use_pallas, interpret=interpret)
             return o.transpose(0, 2, 1, 3)
 
-        k_toks = v_toks = None
-        for i, kind in enumerate(kinds):
-            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend, axis=axis)
-            if kv is not None:
-                k_toks, v_toks = kv
-        return x, (k_toks, v_toks)
+        x, kv, conv_l, ssm_l = _run_kinds(
+            cfg, pcfg, kinds, p_layer, x, sin, cos, attend, conv_l,
+            ssm_l, srows, lens=lens, axis=axis)
+        ys = ()
+        if has_attn:
+            ys += (kv,)
+        if has_ssm:
+            ys += ((conv_l, ssm_l),)
+        return x, ys
 
-    x, (k_all, v_all) = jax.lax.scan(
-        body, x, (params["group0"], k_arena, v_arena))
+    xs = (params["group0"], k_arena, v_arena)
+    if has_ssm:
+        xs += (conv_arena, ssm_arena)
+    x, ys = jax.lax.scan(body, x, xs)
+    k_all = v_all = conv_out = ssm_out = None
+    if has_attn:
+        k_all, v_all = ys[0]
+    if has_ssm:
+        conv_out, ssm_out = ys[-1]
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     # each row's last REAL chunk token (pad rows mirror row 0, lens >= 1)
     x_last = jnp.take_along_axis(
         x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
     logits = _logits_reduce(params["embed"], x_last, cfg, axis, compressed,
                             fp32=pcfg.logits_fp32)
-    return logits[:, 0], k_all, v_all
+    return logits[:, 0], k_all, v_all, conv_out, ssm_out
 
 
 def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
                      use_pallas: bool = False, interpret: bool = True,
-                     axis: Optional[str] = None, compressed: bool = False):
+                     axis: Optional[str] = None, compressed: bool = False,
+                     conv_arena=None, ssm_arena=None, srows=None):
     """Batched prefill forward over a length-padded prompt batch:
     ``lax.scan`` over the stacked layer params (O(1) program size in
     depth) with causal + per-sequence-length masked flash attention —
     padded positions are never attended and their K/V never leave the
-    step (the scatter plan only sources real tokens).
+    step (the scatter plan only sources real tokens).  SSM sublayers
+    run the length-masked paged scan from the rows' (freshly
+    allocated, zero) arena state — pad positions carry state through
+    unchanged, so the masked batch is bit-identical per row to a solo
+    forward.
 
     toks: (B, S) int32 padded prompts; lens: (B,) valid lengths (>= 1).
     Returns (last-real-token logits (B, V), k_all, v_all
-    (L, B, S, kvh, hd)).
+    (L, B, S, kvh, hd) | None, conv_arena, ssm_arena | None).
     """
     hd = cfg.resolved_head_dim
     B, S = toks.shape
@@ -1502,6 +1710,8 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
+    has_attn = "attn" in kinds
+    has_ssm = conv_arena is not None
 
     def attend(q, k, v):
         # (B, S, h, hd) <-> the kernel's (B, h, S, hd) layout
@@ -1511,23 +1721,37 @@ def _prefill_forward(cfg: ModelConfig, pcfg, params, toks, lens, *,
             lengths=lens, use_pallas=use_pallas, interpret=interpret)
         return o.transpose(0, 2, 1, 3)
 
-    def body(x, p_layer):
-        k_toks = v_toks = None
-        for i, kind in enumerate(kinds):
-            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend, axis=axis)
-            if kv is not None:
-                k_toks, v_toks = kv
-        return x, (k_toks, v_toks)
+    def body(x, xs):
+        if has_ssm:
+            p_layer, conv_l, ssm_l = xs
+        else:
+            p_layer = xs
+            conv_l = ssm_l = None
+        x, kv, conv_l, ssm_l = _run_kinds(
+            cfg, pcfg, kinds, p_layer, x, sin, cos, attend, conv_l,
+            ssm_l, srows, lens=lens, axis=axis)
+        ys = ()
+        if has_attn:
+            ys += (kv,)
+        if has_ssm:
+            ys += ((conv_l, ssm_l),)
+        return x, ys
 
-    x, (k_all, v_all) = jax.lax.scan(body, x, params["group0"])
+    xs = ((params["group0"], conv_arena, ssm_arena) if has_ssm
+          else params["group0"])
+    x, ys = jax.lax.scan(body, x, xs)
+    k_all = v_all = conv_out = ssm_out = None
+    if has_attn:
+        k_all, v_all = ys[0]
+    if has_ssm:
+        conv_out, ssm_out = ys[-1]
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     # each row's last REAL token (pad rows mirror row 0, lens >= 1)
     x_last = jnp.take_along_axis(
         x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
     logits = _logits_reduce(params["embed"], x_last, cfg, axis, compressed,
                             fp32=pcfg.logits_fp32)
-    return logits[:, 0], k_all, v_all
+    return logits[:, 0], k_all, v_all, conv_out, ssm_out
 
 
 def _select_tokens(logits: jax.Array, temps: jax.Array, seed: jax.Array, *,
@@ -1647,29 +1871,99 @@ def _sublayer(cfg, kind, sp, x, sin, cos, attend, axis=None):
     return x + out, (k, v)
 
 
+def _run_kinds(cfg, pcfg, kinds, p_layer, x, sin, cos, attend, conv_l,
+               ssm_l, srows, lens=None, axis=None, alive=None):
+    """One scan step's sublayer sequence — the hybrid dispatch every
+    fused forward AND the eager oracle follow in lockstep, so per-kind
+    routing has exactly one implementation.
+
+    ``attn``/``mlp`` route through :func:`_sublayer` unchanged.
+    ``mamba`` sublayers gather their per-sequence recurrent state at
+    ``srows`` from this step's state-arena slices ``conv_l``/``ssm_l``
+    ((sublayers, slots, ...)), run decode (``lens is None``: one token)
+    or the length-masked paged prefill scan, and scatter the fresh
+    state back — pad rows duplicate row 0's inputs, so duplicate
+    scatter destinations carry identical values and the ``.at[].set``
+    stays deterministic.  ``alive`` (the K-block loop's row mask)
+    freezes a dead row's state exactly as the masked KV scatter freezes
+    its slot.  ``moe`` routes through the exact in-jit MoE (host-local
+    engines always resolve to the dense fallback — per-token
+    independent and jit-traceable, so fused stays bit-identical to
+    eager); the router aux loss is a training artifact and is dropped.
+
+    Returns (x, last-attn (k, v) | None, conv_l, ssm_l).
+    """
+    kv_out = None
+    j = 0
+    for i, kind in enumerate(kinds):
+        sp = p_layer[f"{i}_{kind}"]
+        if kind == "mamba":
+            h = rmsnorm(x, sp["norm"], cfg.norm_eps)
+            conv_j = conv_l[j][srows]
+            ssm_j = ssm_l[j][srows]
+            if lens is None:
+                out, (nc, ns) = ssm_mod.ssm_layer(
+                    cfg, pcfg, sp["ssm"], h, mode="decode",
+                    cache=(conv_j, ssm_j))
+            else:
+                out, (nc, ns) = ssm_mod.ssm_layer_paged(
+                    cfg, pcfg, sp["ssm"], h, lengths=lens,
+                    conv_state=conv_j, ssm_state=ssm_j)
+            x = x + out
+            nc = nc.astype(conv_l.dtype)
+            ns = ns.astype(ssm_l.dtype)
+            if alive is not None:
+                nc = jnp.where(alive[:, None, None], nc, conv_j)
+                ns = jnp.where(alive[:, None, None, None], ns, ssm_j)
+            conv_l = conv_l.at[j, srows].set(nc)
+            ssm_l = ssm_l.at[j, srows].set(ns)
+            j += 1
+        elif kind == "moe":
+            h = rmsnorm(x, sp["norm"], cfg.norm_eps)
+            out, _aux = moe_mod.moe_layer(cfg, pcfg, sp["moe"], h)
+            x = x + out
+        else:
+            x, kv = _sublayer(cfg, kind, sp, x, sin, cos, attend,
+                              axis=axis)
+            if kv is not None:
+                kv_out = kv
+    return x, kv_out, conv_l, ssm_l
+
+
 def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                           v_arena, block_tables, lengths, *,
                           use_pallas: bool = False, interpret: bool = True,
                           axis: Optional[str] = None,
-                          compressed: bool = False):
+                          compressed: bool = False, conv_arena=None,
+                          ssm_arena=None, srows=None, alive=None):
     """Decoder forward for one token: ``lax.scan`` over the stacked
     layer params and the per-layer arena slices — O(1) program size in
     depth, and the current token's K/V merges inside the paged kernel.
+    With SSM sublayers (``conv_arena`` set) the scan's xs extend with
+    the per-step state-arena slices and the updated arenas ride out as
+    stacked ys — still one scan, zero extra launches.
 
     With ``axis`` (inside shard_map) the params/arenas are each shard's
     local head slice and the activations are tensor-parallel (see
     :func:`_sublayer` / :func:`_logits_reduce`).
 
-    Returns (logits (b,1,V), k_new, v_new (L, b, 1, kvh, hd)).
+    Returns (logits (b,1,V), k_new, v_new (L, b, 1, kvh, hd) | None,
+    conv_arena, ssm_arena | None).
     """
     hd = cfg.resolved_head_dim
     x = _embed_tokens(params["embed"], tokens, cfg, axis)
     positions = lengths[:, None].astype(jnp.int32)  # token pos == length
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     kinds = T.layer_groups(cfg)[0][1]
+    has_attn = "attn" in kinds
+    has_ssm = conv_arena is not None
 
     def body(x, xs):
-        p_layer, k_l, v_l = xs
+        if has_ssm:
+            p_layer, k_l, v_l, conv_l, ssm_l = xs
+        else:
+            p_layer, k_l, v_l = xs
+            conv_l = ssm_l = None
 
         def attend(q, k, v):
             # one token against the arena pages, with the fresh K/V
@@ -1680,34 +1974,51 @@ def _paged_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                 interpret=interpret, k_self=k[:, 0], v_self=v[:, 0])
             return o[:, None]
 
-        k_tok = v_tok = None
-        for i, kind in enumerate(kinds):
-            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend, axis=axis)
-            if kv is not None:
-                k_tok, v_tok = kv[0][:, 0], kv[1][:, 0]
-        return x, (k_tok, v_tok)
+        x, kv, conv_l, ssm_l = _run_kinds(
+            cfg, pcfg, kinds, p_layer, x, sin, cos, attend, conv_l,
+            ssm_l, srows, axis=axis, alive=alive)
+        ys = ()
+        if has_attn:
+            ys += ((kv[0][:, 0], kv[1][:, 0]),)
+        if has_ssm:
+            ys += ((conv_l, ssm_l),)
+        return x, ys
 
-    x, (k_news, v_news) = jax.lax.scan(
-        body, x, (params["group0"], k_arena, v_arena))
+    xs = (params["group0"], k_arena, v_arena)
+    if has_ssm:
+        xs += (conv_arena, ssm_arena)
+    x, ys = jax.lax.scan(body, x, xs)
+    k_news = v_news = conv_out = ssm_out = None
+    if has_attn:
+        k_news, v_news = ys[0]
+    if has_ssm:
+        conv_out, ssm_out = ys[-1]
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = _logits_reduce(params["embed"], x, cfg, axis, compressed)
-    return logits, k_news[:, :, None], v_news[:, :, None]
+    if has_attn:
+        k_news, v_news = k_news[:, :, None], v_news[:, :, None]
+    return logits, k_news, v_news, conv_out, ssm_out
 
 
 def _eager_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
                           v_arena, block_tables, lengths, *,
-                          use_pallas: bool = False, interpret: bool = True):
+                          use_pallas: bool = False, interpret: bool = True,
+                          conv_arena=None, ssm_arena=None, srows=None):
     """Pre-fusion baseline: Python loop over layers, one jitted
-    paged-attention dispatch per layer.  Shares ``_sublayer`` with
-    the fused path (the self-token merge still happens in-kernel — the
-    old full-history re-reading merge pass is gone)."""
+    paged-attention dispatch per layer.  Shares ``_sublayer`` and the
+    hybrid :func:`_run_kinds` dispatch with the fused path (the
+    self-token merge still happens in-kernel — the old full-history
+    re-reading merge pass is gone).  With SSM sublayers, returns the
+    batch's fresh state VALUES (G, M, b, ...) — the engine writes them
+    back through the op queue's ``ssm_state_write`` kind, the eager
+    analogue of the fused path's in-jit scatter."""
     hd = cfg.resolved_head_dim
     x = embed(params["embed"], tokens, cfg)
     positions = lengths[:, None].astype(jnp.int32)  # token pos == length
     sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
     gparams = params["group0"]
     L, kinds = T.layer_groups(cfg)[0]
+    has_ssm = conv_arena is not None
 
     def layer_attend(k_l, v_l):
         def attend(q, k, v):
@@ -1719,17 +2030,30 @@ def _eager_decode_forward(cfg: ModelConfig, pcfg, params, tokens, k_arena,
         return attend
 
     k_news, v_news = [], []
+    conv_news, ssm_news = [], []
     for li in range(L):
         p_layer = jax.tree.map(lambda a: a[li], gparams)
         attend = layer_attend(k_arena[li], v_arena[li])
-        for i, kind in enumerate(kinds):
-            x, kv = _sublayer(cfg, kind, p_layer[f"{i}_{kind}"], x,
-                                  sin, cos, attend)
-            if kv is not None:
-                k_news.append(kv[0][:, 0][None])   # (1, b, kvh, hd)
-                v_news.append(kv[1][:, 0][None])
+        conv_l = conv_arena[li] if has_ssm else None
+        ssm_l = ssm_arena[li] if has_ssm else None
+        x, kv, conv_l, ssm_l = _run_kinds(
+            cfg, pcfg, kinds, p_layer, x, sin, cos, attend, conv_l,
+            ssm_l, srows)
+        if kv is not None:
+            k_news.append(kv[0][:, 0][None])   # (1, b, kvh, hd)
+            v_news.append(kv[1][:, 0][None])
+        if has_ssm:
+            # eager rids are unique (no pad rows), so gathering the
+            # just-set rows back yields exactly the fresh values
+            conv_news.append(conv_l[:, srows][None])   # (1, M, b, ...)
+            ssm_news.append(ssm_l[:, srows][None])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_out(params["embed"], x, cfg)
-    k_new = jnp.concatenate(k_news, axis=0)[:, :, None]   # (L, b, 1, kvh, hd)
-    v_new = jnp.concatenate(v_news, axis=0)[:, :, None]
-    return logits, k_new, v_new
+    k_new = v_new = conv_new = ssm_new = None
+    if k_news:
+        k_new = jnp.concatenate(k_news, axis=0)[:, :, None]  # (L,b,1,kvh,hd)
+        v_new = jnp.concatenate(v_news, axis=0)[:, :, None]
+    if has_ssm:
+        conv_new = jnp.concatenate(conv_news, axis=0)   # (G, M, b, ...)
+        ssm_new = jnp.concatenate(ssm_news, axis=0)
+    return logits, k_new, v_new, conv_new, ssm_new

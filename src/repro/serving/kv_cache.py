@@ -60,8 +60,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.allocator import PimAllocError, SubarrayAllocator, arena_groups
+from repro.core.op_registry import StateWriteBatch, group_inits_by_value
 from repro.core.pimolib import PimLib, TpuLib
 from repro.kernels.ambit import ops as amb_ops
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.models import transformer as T
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.trace import PimTrace
 
@@ -74,13 +77,215 @@ class Sequence:
     shared_prefix_pages: int = 0
 
 
+class PagedStateArena:
+    """Paged recurrent state for SSM/hybrid layouts — the KV arena's
+    constant-size sibling.
+
+    A sequence's Mamba state never grows: one arena *row* (slot) holds
+    its full-depth conv window + SSD state for the whole lifetime.  The
+    paging economics therefore differ from KV pages in every direction
+    the docstring above cares about:
+
+    * no growth — allocation is one slot at ``create``, period;
+    * no prefix sharing — recurrent state is position-dependent, so a
+      shared prompt prefix cannot attach (the owning cache declines
+      radix/pairwise prefix hits entirely when a state arena exists);
+    * copy-on-fork — a beam fork duplicates the *whole* row immediately
+      (there is no page-granular divergence to defer), a RowClone copy
+      on the model-face replay.
+
+    Mutations route through the owning cache's :class:`PimOpQueue`
+    under three kinds, all flushed as ONE coalesced launch per arena
+    regardless of depth or batch:
+
+    * ``ssm_state_write`` — the per-round state scatter (the
+      ``SSM_STATE_WRITE`` opcode's JAX face; the registry default flush
+      demands this arena-bound rebind via ``queue.register_kind``);
+    * ``state_copy`` — copy-on-fork (RowClone-priced on replay);
+    * ``state_init`` — init-on-free zeroing (RowClone-Init-priced), so
+      a fresh slot is zero by construction and cross-request state
+      leakage is structurally impossible.
+
+    Hazard rows are namespaced as ``("state", slot)`` tuples so they
+    never collide with KV page ids in the queue's hazard set — a fork's
+    ``state_copy`` admission reading a slot with a deferred
+    ``ssm_state_write`` pending forces the flush (program order), which
+    is exactly the regression the hybrid tests pin.
+
+    Arenas are ``(groups, mamba_sublayers, slots, ...)`` — the leading
+    ``groups`` dim matches the engine's ``lax.scan`` length so the
+    fused steps scan (params, k, v, conv, ssm) together.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_slots: int, queue, lib,
+                 trace: Optional[PimTrace], use_pallas: bool = False,
+                 dtype=jnp.bfloat16) -> None:
+        G, M = _mamba_layout(cfg)
+        assert M > 0, "state arena needs at least one mamba sublayer"
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        ch = d_in + 2 * s.state_dim
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.use_pallas = use_pallas
+        # conv window in the cache dtype (matches the model cache spec);
+        # the SSD state stays float32 — the recurrence accumulates.
+        self.conv = jnp.zeros((G, M, num_slots, s.conv_width - 1, ch), dtype)
+        self.ssm = jnp.zeros((G, M, num_slots, nheads, s.head_dim,
+                              s.state_dim), jnp.float32)
+        self.queue = queue
+        self.lib = lib
+        self.trace = trace
+        self.rows: Dict[int, int] = {}         # seq_id -> slot
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        if trace is not None:
+            trace.num_state_rows = num_slots
+        queue.register_kind("ssm_state_write", self._flush_write)
+        queue.register_kind("state_copy", self._flush_copy)
+        queue.register_kind("state_init", self._flush_init)
+
+    # -- queue flush executors (arena-bound closures) ------------------- #
+    # Each returns the (k, v) arenas untouched: state buffers live here,
+    # not on the lib (the kv_write flush asserts a (k, v) pair).
+
+    def _flush_write(self, q, arenas, ops):
+        rows = jnp.asarray([r for o in ops for r in o.rows], jnp.int32)
+        if len(ops) == 1:
+            conv, ssm = ops[0].conv, ops[0].ssm
+        else:
+            conv = jnp.concatenate([o.conv for o in ops], axis=2)
+            ssm = jnp.concatenate([o.ssm for o in ops], axis=2)
+        self.conv = ssm_ops.pim_state_scatter(self.conv, rows, conv,
+                                              use_pallas=q.use_pallas)
+        self.ssm = ssm_ops.pim_state_scatter(self.ssm, rows, ssm,
+                                             use_pallas=q.use_pallas)
+        q._count_launch("ssm_state_write", 2)
+        return arenas
+
+    def _flush_copy(self, q, arenas, ops):
+        src = jnp.asarray([s for s, _ in ops], jnp.int32)
+        dst = jnp.asarray([d for _, d in ops], jnp.int32)
+        self.conv = ssm_ops.pim_state_copy(self.conv, src, dst,
+                                           use_pallas=q.use_pallas)
+        self.ssm = ssm_ops.pim_state_copy(self.ssm, src, dst,
+                                          use_pallas=q.use_pallas)
+        q._count_launch("state_copy", 2)
+        return arenas
+
+    def _flush_init(self, q, arenas, ops):
+        for value, rows in group_inits_by_value(ops).items():
+            dst = jnp.asarray(rows, jnp.int32)
+            self.conv = ssm_ops.pim_state_init(self.conv, dst, value,
+                                               use_pallas=q.use_pallas)
+            self.ssm = ssm_ops.pim_state_init(self.ssm, dst, value,
+                                              use_pallas=q.use_pallas)
+            q._count_launch("state_init", 2)
+        return arenas
+
+    # -- slot ledger ---------------------------------------------------- #
+
+    def alloc(self, seq_id: int) -> int:
+        """One slot per sequence; the slot is already zero (init-on-free
+        ran when its previous owner died), so allocation launches
+        nothing."""
+        if not self._free:
+            raise PimAllocError("state arena out of slots")
+        slot = self._free.pop()
+        self.rows[seq_id] = slot
+        return slot
+
+    def fork(self, src_id: int, dst_id: int) -> int:
+        """Copy-on-fork: duplicate the parent's whole state row NOW.
+        ``admit`` flushes any deferred ``ssm_state_write`` still pending
+        against the source slot first — otherwise the queue's
+        replay-by-kind would copy stale state.  The copy itself is only
+        enqueued; the owning cache's ``fork`` flush coalesces it with
+        the KV tail copies."""
+        src = self.rows[src_id]
+        dst = self.alloc(dst_id)
+        self.queue.admit("state_copy", (("state", dst),), self.lib.flush,
+                         reads=(("state", src),))
+        self.queue.enqueue("state_copy", (src, dst))
+        return dst
+
+    def free(self, seq_id: int) -> None:
+        """Release a slot; zero it through the queue (one coalesced
+        RowClone-Init launch per arena at the caller's flush)."""
+        slot = self.rows.pop(seq_id)
+        self.queue.admit("state_init", (("state", slot),), self.lib.flush)
+        self.queue.enqueue("state_init", (slot, 0.0))
+        self._free.append(slot)
+
+    def row(self, seq_id: int) -> int:
+        return self.rows[seq_id]
+
+    def rows_for(self, seq_ids: Seq[int]) -> List[int]:
+        return [self.rows[sid] for sid in seq_ids]
+
+    @property
+    def rows_in_use(self) -> int:
+        return len(self.rows)
+
+    def _row_bytes(self) -> int:
+        G, M = self.conv.shape[:2]
+        conv_elems = int(np.prod(self.conv.shape[3:]))
+        ssm_elems = int(np.prod(self.ssm.shape[3:]))
+        return G * M * (conv_elems * np.dtype(self.conv.dtype).itemsize
+                        + ssm_elems * 4)
+
+    # -- mutation entry points ------------------------------------------ #
+
+    def write(self, seq_ids: Seq[int], conv: jax.Array, ssm: jax.Array,
+              *, flush: bool = True) -> None:
+        """Eager-path round write: conv/ssm are (groups, sublayers,
+        batch, ...) fresh states, one batch entry per sequence.  Admits
+        with hazard tracking, enqueues ONE stacked record (O(1) host
+        work in batch), and flushes unless the caller defers — the
+        deferred form is what the fork-hazard regression races."""
+        rows = self.rows_for(seq_ids)
+        self.queue.admit("ssm_state_write",
+                         [("state", r) for r in rows], self.lib.flush)
+        batch = StateWriteBatch(rows, conv.astype(self.conv.dtype),
+                                ssm.astype(self.ssm.dtype))
+        self.queue.enqueue("ssm_state_write", batch, n_ops=batch.n)
+        if flush:
+            self.lib.flush()
+
+    def adopt(self, conv: jax.Array, ssm: jax.Array) -> None:
+        """Fused-path commit: the engine's step scattered new rows
+        in-jit on donated state arenas; adopt the results.  The fused
+        dispatch is already counted (``fused_*``); only the trace needs
+        the write event — callers record it via
+        :meth:`record_fused_write`."""
+        self.conv = conv
+        self.ssm = ssm
+
+    def record_fused_write(self, seq_ids: Seq[int], *,
+                           rounds: int = 1) -> None:
+        if self.trace is not None and seq_ids:
+            rows = self.rows_for(seq_ids)
+            self.trace.record_state_write(
+                rows, nbytes=len(rows) * self._row_bytes(), rounds=rounds)
+
+    def gather(self, seq_ids: Seq[int]) -> Tuple[jax.Array, jax.Array]:
+        """Host-side state read for tests/oracles: (conv, ssm) stacked
+        (groups, sublayers, batch, ...).  Flush first so the read sees
+        committed state."""
+        self.lib.flush()
+        rows = jnp.asarray(self.rows_for(seq_ids), jnp.int32)
+        return (ssm_ops.state_gather_inline(self.conv, rows),
+                ssm_ops.state_gather_inline(self.ssm, rows))
+
+
 class PagedKVCache:
     def __init__(self, cfg: ModelConfig, *, num_pages: int = 128,
                  page_size: int = 16, num_slabs: int = 4,
                  dtype=jnp.bfloat16, use_pallas: bool = False,
                  lib: Optional[PimLib] = None, record_trace: bool = False,
                  mesh=None, prefix_cache: bool = False,
-                 zero_scan: bool = False):
+                 zero_scan: bool = False,
+                 state_slots: Optional[int] = None):
         assert num_pages % num_slabs == 0
         hd = cfg.resolved_head_dim
         self.cfg = cfg
@@ -130,7 +335,9 @@ class PagedKVCache:
         self.stats = {"cow_copies": 0, "pages_zeroed": 0, "prefix_hits": 0,
                       "prefix_hit_tokens": 0, "prefix_evictions": 0,
                       "init_skips_zero": 0, "zero_audit_pages": 0,
-                      "zero_audit_failures": 0}
+                      "zero_audit_failures": 0,
+                      "state_pages": 0, "state_forks": 0,
+                      "prefix_declined_ssm": 0}
         # Ambit zero-compare paths (opt-in: the scans add read-only
         # launches that per-round dispatch-count pins do not expect).
         # _known_zero holds pages a scan verified all-zero, so their
@@ -157,6 +364,18 @@ class PagedKVCache:
         # always (re)bind, so a lib reused from a previous cache does not
         # keep recording into that cache's trace
         self.queue.trace = self.trace
+        # SSM/hybrid layouts: one paged state arena next to the KV pair.
+        # Its buffers do NOT join lib.buffers (the kv_write flush is a
+        # (k, v) contract); instead the arena rebinds the queue's
+        # ssm_state_write kind (+ its state_copy/state_init siblings) to
+        # arena-bound closures, so one lib.flush drains both worlds with
+        # unified launch accounting.
+        self.state: Optional[PagedStateArena] = None
+        if _mamba_layout(cfg)[1] > 0:
+            self.state = PagedStateArena(
+                cfg, num_slots=state_slots or num_pages, queue=self.queue,
+                lib=self.lib, trace=self.trace, use_pallas=use_pallas,
+                dtype=dtype)
 
     # the arenas live on the lib (so a shared lib sees every mutation);
     # these properties keep the public names stable
@@ -307,6 +526,17 @@ class PagedKVCache:
         """
         seq = Sequence(seq_id)
         shared_pages: List[int] = []
+        if self.state is not None and (tokens is not None
+                                       or (share_with is not None
+                                           and shared_len)):
+            # Recurrent state is position-dependent: a radix/pairwise
+            # prefix hit could share the attention KV pages but NOT the
+            # SSM state the prefix built up, and a sequence attached at
+            # a nonzero offset would never compute it.  Decline the
+            # match entirely — the engine recomputes the full prompt
+            # (dense-only hit behavior is unchanged).
+            self.stats["prefix_declined_ssm"] += 1
+            share_with, shared_len, tokens = None, 0, None
         if share_with is not None and shared_len:
             if self.prefix is not None:
                 warnings.warn(
@@ -341,6 +571,9 @@ class PagedKVCache:
             seq.length = min(seq.length + self.page_size, prompt_len)
         seq.length = prompt_len
         self.seqs[seq_id] = seq
+        if self.state is not None:
+            self.state.alloc(seq_id)
+            self.stats["state_pages"] = self.state.rows_in_use
         return seq
 
     def commit_prefix(self, seq_id: int, tokens: Seq[int]) -> int:
@@ -352,8 +585,8 @@ class PagedKVCache:
         into it); the tree retains each newly indexed page, so the
         prefix outlives this sequence.  Returns the number of pages
         newly indexed."""
-        if self.prefix is None:
-            return 0
+        if self.prefix is None or self.state is not None:
+            return 0   # SSM state is not prefix-shareable: never index
         seq = self.seqs[seq_id]
         n_full = min(len(seq.pages), len(tokens) // self.page_size)
         if n_full == 0:
@@ -379,6 +612,13 @@ class PagedKVCache:
         dst.length = src.length
         dst.shared_prefix_pages = full
         self.seqs[dst_id] = dst
+        if self.state is not None:
+            # copy-on-fork for the recurrent state: the whole row, now
+            # (no page-granular divergence to defer); coalesces into
+            # this fork's single copy flush
+            self.state.fork(src_id, dst_id)
+            self.stats["state_forks"] += 1
+            self.stats["state_pages"] = self.state.rows_in_use
         self.flush_pending()   # one batched copy launch per arena
         return dst
 
@@ -505,6 +745,9 @@ class PagedKVCache:
                     p for p, z in zip(excl, flags) if z)
         for p in seq.pages:
             self._release_page(p)
+        if self.state is not None and seq_id in self.state.rows:
+            self.state.free(seq_id)   # init-on-free rides the same flush
+            self.stats["state_pages"] = self.state.rows_in_use
         self.flush_pending()
 
     def clear_prefix(self) -> int:
@@ -538,7 +781,8 @@ class PagedKVCache:
 
     def commit_fused_round(self, seq_ids: List[int], k_arena: jax.Array,
                            v_arena: jax.Array, *,
-                           kind: Optional[str] = "fused_decode") -> None:
+                           kind: Optional[str] = "fused_decode",
+                           wrote_kv: bool = True) -> None:
         """Adopt arenas mutated *inside* the engine's fused decode step
         (the round's KV scatter runs in-jit on donated buffers, so there
         is no separate ``kv_write`` flush) and advance each sequence by
@@ -549,10 +793,13 @@ class PagedKVCache:
         tracing, the round's writes land in the trace).  ``kind=None``
         skips the launch count — for the mixed chunk+decode round, whose
         ONE dispatch covers several commits and is accounted once by the
-        engine as ``fused_mixed``."""
+        engine as ``fused_mixed``.  ``wrote_kv=False`` (the pure-SSM
+        engine: no attention sublayer touched the arenas) still advances
+        lengths/accounting but prices no phantom KV traffic in the
+        trace."""
         self.k_arena = k_arena
         self.v_arena = v_arena
-        if self.trace is not None:
+        if self.trace is not None and wrote_kv:
             pages = [self.seqs[sid].pages[-1] for sid in seq_ids]
             slots = [self.seqs[sid].length % self.page_size
                      for sid in seq_ids]
@@ -566,7 +813,8 @@ class PagedKVCache:
     def commit_fused_block(self, seq_ids: List[int], counts: List[int],
                            k_arena: jax.Array, v_arena: jax.Array, *,
                            rounds: int = 1,
-                           kind: Optional[str] = "fused_decode_block") -> None:
+                           kind: Optional[str] = "fused_decode_block",
+                           wrote_kv: bool = True) -> None:
         """Adopt arenas mutated inside the engine's multi-round decode
         block (``decode_block_rounds=K``: up to K decode rounds in ONE
         ``lax.while_loop`` dispatch) and advance each sequence by the
@@ -577,10 +825,10 @@ class PagedKVCache:
         so only the real writes land in the trace — one ``kv_write``
         event for the whole block, stamped with the executed in-loop
         ``rounds`` so replay can see the K-blocking the host path
-        achieved."""
+        achieved.  ``wrote_kv=False``: see :meth:`commit_fused_round`."""
         self.k_arena = k_arena
         self.v_arena = v_arena
-        if self.trace is not None:
+        if self.trace is not None and wrote_kv:
             pages: List[int] = []
             slots: List[int] = []
             for sid, n in zip(seq_ids, counts):
@@ -662,8 +910,31 @@ def _bucket_pow2(n: int) -> int:
 
 
 def _num_attn_layers(cfg: ModelConfig) -> int:
+    """Leading (layers) dim of the KV arenas.
+
+    This is the engine's ``lax.scan`` length, NOT the count of
+    attention sublayers: hybrid superblocks carry exactly one attn per
+    scanned step (num_layers // attn_every steps), while the pure-ssm
+    family scans num_layers steps and keeps a phantom full-depth KV
+    arena — the scan xs' leading dims must match, and the tiny-config
+    waste buys a single uniform step signature across the zoo."""
     if cfg.family == "hybrid":
         return cfg.num_layers // cfg.attn_every
     if cfg.family == "encdec":
         return cfg.dec_layers
     return cfg.num_layers
+
+
+def _mamba_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(scan groups, mamba sublayers per group) — the state arenas'
+    leading (G, M) dims.  (0, 0) for layouts the paged engine serves
+    without recurrent state (no mamba kinds, or a multi-group family
+    the engine rejects anyway)."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return (0, 0)
+    groups = T.layer_groups(cfg)
+    if len(groups) != 1:
+        return (0, 0)
+    count, kinds = groups[0]
+    m = sum(1 for k in kinds if k == "mamba")
+    return (count, m) if m else (0, 0)

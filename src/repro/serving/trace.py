@@ -46,7 +46,11 @@ class TraceEvent:
     kind: str                        # "page_copy" | "page_init" |
                                      # "page_and" | "page_or" | "page_not" |
                                      # "page_zero_scan" | "kv_write" |
-                                     # "prefix_hit"
+                                     # "prefix_hit" | "ssm_state_write" |
+                                     # "state_copy" | "state_init"
+                                     # (state_* dst/src are state-arena
+                                     # rows, a namespace disjoint from
+                                     # KV page ids)
     src: Tuple[int, ...] = ()        # source pages (page_copy, bitwise)
     dst: Tuple[int, ...] = ()        # destination pages (all kinds)
     slots: Tuple[int, ...] = ()      # in-page slots (kv_write)
@@ -72,6 +76,10 @@ class PimTrace:
         # bytes per stored KV element (the ARENA dtype — enqueued source
         # arrays may be wider and only cast at flush)
         self.kv_itemsize = kv_itemsize
+        # state-arena slot count (set by the owning cache when an SSM
+        # state arena exists) — sizes the replay twin so state rows get
+        # their own DRAM rows next to the KV pages
+        self.num_state_rows = 0
         self.events: List[TraceEvent] = []
 
     def __len__(self) -> int:
@@ -111,6 +119,23 @@ class PimTrace:
                 for o in ops)
             self.events.append(TraceEvent(kind, dst=pages, slots=slots,
                                           nbytes=nbytes))
+        elif kind == "state_copy":
+            # copy-on-fork of whole state rows — RowClone on replay
+            self.events.append(TraceEvent(
+                kind, src=tuple(s for s, _ in ops),
+                dst=tuple(d for _, d in ops)))
+        elif kind == "state_init":
+            for value, rows in group_inits_by_value(ops).items():
+                self.events.append(TraceEvent(kind, dst=tuple(rows),
+                                              value=value))
+        elif kind == "ssm_state_write":
+            # StateWriteBatch records (already cast to the arena dtypes)
+            rows = tuple(r for o in ops for r in o.rows)
+            nbytes = sum(
+                o.conv.size * int(np.dtype(o.conv.dtype).itemsize)
+                + o.ssm.size * int(np.dtype(o.ssm.dtype).itemsize)
+                for o in ops)
+            self.events.append(TraceEvent(kind, dst=rows, nbytes=nbytes))
 
     def record_kv_write(self, pages, slots, nbytes: int, *,
                         rounds: int = 1) -> None:
@@ -121,6 +146,15 @@ class PimTrace:
         achieved), and analyses can recover rounds-per-host-commit."""
         self.events.append(TraceEvent("kv_write", dst=tuple(pages),
                                       slots=tuple(slots), nbytes=int(nbytes),
+                                      rounds=int(rounds)))
+
+    def record_state_write(self, rows, nbytes: int, *,
+                           rounds: int = 1) -> None:
+        """Explicit hook for state writes that bypass the queue (the
+        fused steps scatter recurrent state in-jit on donated arenas,
+        mirroring the KV path's :meth:`record_kv_write`)."""
+        self.events.append(TraceEvent("ssm_state_write",
+                                      dst=tuple(rows), nbytes=int(nbytes),
                                       rounds=int(rounds)))
 
     def record_zero_scan(self, pages) -> None:
@@ -168,9 +202,13 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
     pages_per_slab = trace.num_pages // trace.num_slabs
     if lib is None:
         # +2 rows of slack per subarray: the reserved zero row, plus the
-        # discovery probe's scratch tolerance.
+        # discovery probe's scratch tolerance.  State-arena rows (SSM
+        # serving) all map into the first subarray — copy-on-fork src
+        # and dst share it, so forks replay as legal RowClones — which
+        # therefore needs room for every state slot on top of its pages.
         geo = DRAMGeometry(num_subarrays=trace.num_slabs,
-                           rows_per_subarray=pages_per_slab + 2,
+                           rows_per_subarray=(pages_per_slab + 2
+                                              + trace.num_state_rows),
                            row_bytes=row_bytes)
         mc = MemoryController(SimulatedDRAM(geo))
         smap = discover_subarrays(mc, max_rows=geo.num_rows)
@@ -190,6 +228,17 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
                                                  tag=f"page{page}")
         return page_row[page]
 
+    # state-arena rows live in their own id namespace (slot ids overlap
+    # page ids); one subarray holds them all so fork copies are
+    # same-group RowClones
+    state_row: Dict[int, Allocation] = {}
+
+    def srow_of(slot: int) -> Allocation:
+        if slot not in state_row:
+            state_row[slot] = lib.allocator.alloc(1, group=groups[0],
+                                                  tag=f"srow{slot}")
+        return state_row[slot]
+
     def grouped(pages) -> Dict[int, Allocation]:
         """Batch same-group rows into one Allocation (one pimolib call
         -> one POC handshake, mirroring the serving-side coalescing)."""
@@ -205,9 +254,12 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
            "ambit_bitwise": 0.0, "zero_scan_ambit": 0.0,
            "cpu_fallback_copy": 0.0, "cpu_fallback_init": 0.0,
            "cpu_fallback_bitwise": 0.0,
-           "kv_write_cpu": 0.0, "prefix_hit_rowclone": 0.0}
+           "kv_write_cpu": 0.0, "prefix_hit_rowclone": 0.0,
+           "state_rowclone_copy": 0.0, "state_rowclone_init": 0.0,
+           "state_write_cpu": 0.0}
     cpu = {"memcpy": 0.0, "calloc": 0.0, "bitwise": 0.0, "zero_scan": 0.0,
-           "kv_write_cpu": 0.0, "prefix_hit_memcpy": 0.0}
+           "kv_write_cpu": 0.0, "prefix_hit_memcpy": 0.0,
+           "state_memcpy": 0.0, "state_calloc": 0.0, "state_write_cpu": 0.0}
     _BITWISE_OP = {"page_and": "and", "page_or": "or", "page_not": "not"}
 
     for ev in trace.events:
@@ -289,6 +341,39 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
             receipts.append(rec)
             pim["kv_write_cpu"] += ns
             cpu["kv_write_cpu"] += ns
+        elif ev.kind == "state_copy":
+            # copy-on-fork of whole state rows: all state rows share one
+            # subarray by construction, so these are always legal
+            # same-group RowClones; the CPU baseline memcpys each row
+            cpu["state_memcpy"] += ev.n * costs.cpu_copy_ns()
+            src = Allocation(rows=tuple(srow_of(s).rows[0] for s in ev.src),
+                             group=groups[0])
+            dst = Allocation(rows=tuple(srow_of(d).rows[0] for d in ev.dst),
+                             group=groups[0])
+            rec = lib.copy(src, dst, blocking=Blocking.FIN)
+            receipts.append(rec)
+            pim["state_rowclone_copy"] += rec.latency_ns
+        elif ev.kind == "state_init":
+            cpu["state_calloc"] += ev.n * costs.cpu_init_ns()
+            alloc = Allocation(rows=tuple(srow_of(d).rows[0] for d in ev.dst),
+                               group=groups[0])
+            byte_fill = (float(ev.value).is_integer()
+                         and 0 <= ev.value <= 255)
+            rec = (lib.init(alloc, ev.value, blocking=Blocking.FIN)
+                   if byte_fill else lib.cpu_init(alloc))
+            receipts.append(rec)
+            pim["state_rowclone_init"] += rec.latency_ns
+        elif ev.kind == "ssm_state_write":
+            # slot-granular recurrent-state scatter: like KV_WRITE, the
+            # SSM_STATE_WRITE opcode has no DDR3 sequence — the model
+            # face reports it unsupported, so replay prices it as CPU
+            # traffic on both accounts (graceful capability fallback)
+            ns = mc.memcpy_ns(max(ev.nbytes, 1))
+            rec = OpReceipt(True, "cpu_write", face=lib.face, n_ops=ev.n,
+                            latency_ns=ns)
+            receipts.append(rec)
+            pim["state_write_cpu"] += ns
+            cpu["state_write_cpu"] += ns
         elif ev.kind == "prefix_hit":
             # A radix prefix-cache hit: on the JAX face the attach was
             # free (refcount++), but it displaced the per-request bulk
@@ -326,6 +411,12 @@ def replay_on_device(trace: PimTrace, *, lib: Optional[DeviceLib] = None,
         "speedup": {
             "copy": (cpu["memcpy"] / copy_pim) if copy_pim else None,
             "init": (cpu["calloc"] / init_pim) if init_pim else None,
+            "state_copy": ((cpu["state_memcpy"]
+                            / pim["state_rowclone_copy"])
+                           if pim["state_rowclone_copy"] else None),
+            "state_init": ((cpu["state_calloc"]
+                            / pim["state_rowclone_init"])
+                           if pim["state_rowclone_init"] else None),
             "bitwise": (cpu["bitwise"] / bitwise_pim) if bitwise_pim else None,
             "zero_scan": ((cpu["zero_scan"] / pim["zero_scan_ambit"])
                           if pim["zero_scan_ambit"] else None),

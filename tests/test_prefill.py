@@ -144,7 +144,7 @@ class TestPrefillParity:
             sp = _bucket_pow2(n)
             toks = np.zeros((1, sp), np.int32)
             toks[0, :n] = prompt
-            lg_f, k_all, v_all = E._prefill_forward(
+            lg_f, k_all, v_all, _, _ = E._prefill_forward(
                 cfg, PCFG, params, jnp.asarray(toks),
                 jnp.asarray([n], jnp.int32), use_pallas=False,
                 interpret=True)
@@ -267,7 +267,7 @@ class TestChunkedPrefill:
         toks = np.zeros((1, clen), np.int32)
         toks[0] = prompt[c:]
         bt, plens = eng.cache.block_table([0], lengths=[c])
-        lg_c, k_all, v_all = E._chunk_prefill_forward(
+        lg_c, k_all, v_all, _, _ = E._chunk_prefill_forward(
             cfg, PCFG, params, jnp.asarray(toks),
             jnp.asarray([clen], jnp.int32), jnp.asarray([c], jnp.int32),
             eng.cache.k_arena, eng.cache.v_arena, bt, plens,

@@ -301,6 +301,71 @@ class TestDispatchCounts:
         assert eng.stats["mixed_dispatches"] == base_mixed + 1
         assert eng.stats["decode_stall_rounds"] == 0
 
+    @staticmethod
+    def _state_engine(arch, rng, *, nreqs=2, budget=4, **kw):
+        over = {k: kw.pop(k) for k in ("num_layers", "attn_every")
+                if k in kw}
+        cfg = reduced(ARCHS[arch], **over)
+        params = init_params(T.model_defs(cfg), jax.random.PRNGKey(1))
+        eng = PagedEngine(cfg, params, page_size=4, num_pages=128, **kw)
+        for i in range(nreqs):
+            prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new_tokens=budget,
+                               temperature=0.0))
+        return eng
+
+    def test_hybrid_decode_round_is_one_dispatch(self, rng):
+        """A hybrid decode round stays ONE dispatch: the in-scan state
+        scatter and in-jit MoE routing ride the fused step, so no
+        ``ssm_state_write`` (or any other) launch appears next to the
+        single ``fused_decode``."""
+        for arch, kw in (("mamba2-1.3b", dict(num_layers=2)),
+                         ("jamba-1.5-large-398b",
+                          dict(num_layers=4, attn_every=4))):
+            eng = self._state_engine(arch, rng, **kw)
+            while eng.queue:
+                eng._prefill(eng.queue.pop(0))
+            eng.cache.flush_pending()
+            before = eng.cache.queue.snapshot()
+            eng._decode_round()
+            delta = eng.cache.queue.delta(before)
+            assert delta == {"fused_decode": 1}, (arch, delta)
+
+    def test_eager_state_write_launches_constant_in_layers_and_batch(
+            self, rng):
+        """The eager oracle pays the ``SSM_STATE_WRITE`` opcode's real
+        price — and that price is one coalesced flush per round (2
+        launches: conv + ssm arena), independent of depth and batch."""
+        counts = []
+        for layers, nreqs in ((1, 1), (2, 3)):
+            eng = self._state_engine("mamba2-1.3b", rng, nreqs=nreqs,
+                                     num_layers=layers, fused=False,
+                                     fused_prefill=False)
+            while eng.queue:
+                eng._prefill(eng.queue.pop(0))
+            eng.cache.flush_pending()
+            before = eng.cache.queue.snapshot()
+            eng._decode_round()
+            counts.append(eng.cache.queue.delta(before)["ssm_state_write"])
+        assert set(counts) == {2}, counts
+
+    def test_k_block_hybrid_decode_under_one_dispatch_per_token(self, rng):
+        """The persistent decode loop holds its dispatches-per-token win
+        on state-arena layouts: 16 pure-decode rounds at K=8 fold into 2
+        ``fused_decode_block`` launches."""
+        eng = self._state_engine("mamba2-1.3b", rng, num_layers=2,
+                                 budget=48, decode_block_rounds=8)
+        eng.run(max_rounds=9)           # warmup: prefills + first block
+        assert len(eng.active) == 2
+        before = eng.cache.queue.snapshot()
+        base_tokens = eng.stats["tokens_out"]
+        eng.run(max_rounds=16)          # pure decode, nothing queued
+        delta = eng.cache.queue.delta(before)
+        tokens = eng.stats["tokens_out"] - base_tokens
+        assert delta == {"fused_decode_block": 2}, delta
+        assert tokens == 16 * 2
+        assert sum(delta.values()) / tokens < 1.0
+
 
 class TestFusedDecode:
     """The fused single-dispatch decode round: jitted scan-over-layers
@@ -338,9 +403,9 @@ class TestFusedDecode:
         bt, lens = eng.cache.block_table(rids)
         args = (cfg, eng.pcfg, params, last, eng.cache.k_arena,
                 eng.cache.v_arena, bt, lens)
-        lg_s, k_s, v_s = E._paged_decode_forward(
+        lg_s, k_s, v_s, _, _ = E._paged_decode_forward(
             *args, use_pallas=False, interpret=True)
-        lg_e, k_e, v_e = E._eager_decode_forward(
+        lg_e, k_e, v_e, _, _ = E._eager_decode_forward(
             *args, use_pallas=False, interpret=True)
         # fp32 logits over bf16 activations: scan vs unrolled loops may
         # fuse/round differently, so parity holds at bf16 resolution
